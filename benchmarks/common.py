@@ -1,0 +1,114 @@
+"""Shared benchmark harness.
+
+The container is a single CPU core, so every paper table is reproduced at
+REDUCED scale (same code paths, smaller hidden sizes / fewer steps) while the
+'Size' columns are computed at the PAPER's exact full-scale dimensions
+(analytic, bit-exact).  `--quick` shrinks steps further for smoke use.
+
+Corpora: the paper's datasets are not on disk (offline container); stand-ins
+with matched vocab sizes are generated from an order-2 Markov process
+(data/synth.py) or taken from this repository's own source tree ('linux-
+kernel-like' code corpus).  Relative claims (ours ~ fp baseline,
+BinaryConnect collapses) are meaningful on these; absolute BPC values are
+corpus-dependent and reported as 'reduced-scale, synthetic corpus'.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bnlstm as BL
+from repro.core.quantize import QuantSpec
+from repro.data.synth import markov_bytes
+from repro.data.text import ByteCorpus
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import (make_rnn_eval, make_rnn_train_step,
+                                    train_state_init)
+
+REPO = Path(__file__).resolve().parents[1]
+RESULTS = REPO / "results" / "benchmarks"
+
+_corpora = {}
+
+
+def corpus(name: str) -> ByteCorpus:
+    """Matched-vocab stand-ins for the paper's corpora."""
+    if name not in _corpora:
+        if name == "linux":  # code corpus from this repo's own sources
+            _corpora[name] = ByteCorpus.from_dir(REPO / "src", limit_bytes=2_000_000)
+        else:
+            vocab, seed, n = {"ptb": (50, 0, 120_000),
+                              "warpeace": (87, 1, 120_000),
+                              "text8": (27, 2, 120_000),
+                              "words": (255, 3, 200_000)}[name]
+            data = np.asarray(markov_bytes(n, vocab=vocab, seed=seed)) % 256
+            _corpora[name] = ByteCorpus.from_bytes(bytes(bytearray(data)))
+    return _corpora[name]
+
+
+def spec_for(mode: str) -> QuantSpec:
+    if mode == "fp":
+        return QuantSpec(mode="none")
+    return QuantSpec(mode=mode, norm="batch")
+
+
+def train_rnn(corpus_name: str, mode: str, *, hidden=128, steps=150,
+              batch=16, seq=48, cell="lstm", lr=3e-3, seed=0,
+              eval_batches=4):
+    """Train a reduced BN-LSTM/GRU with `mode` quantization; returns metrics."""
+    c = corpus(corpus_name)
+    cfg = BL.RNNConfig(vocab=c.vocab, d_hidden=hidden, cell=cell,
+                       quant=spec_for(mode),
+                       cell_norm=mode not in ("binaryconnect", "twn",
+                                              "dorefa3", "dorefa4"))
+    var = BL.rnn_lm_init(jax.random.PRNGKey(seed), cfg)
+    st = train_state_init(var["params"], OptConfig(lr=lr),
+                          jax.random.PRNGKey(seed + 1), bn_state=var["state"])
+    step = jax.jit(make_rnn_train_step(cfg, OptConfig(lr=lr)))
+    t0 = time.perf_counter()
+    curve = []
+    for i in range(steps):
+        b = {k: jnp.asarray(v) for k, v in c.batch("train", i, batch, seq).items()}
+        st, m = step(st, b)
+        if i % max(steps // 10, 1) == 0:
+            curve.append(round(float(m["bpc"]), 4))
+    dt = time.perf_counter() - t0
+    ev = jax.jit(make_rnn_eval(cfg))
+    bpcs = []
+    for i in range(eval_batches):
+        b = {k: jnp.asarray(v) for k, v in c.batch("valid", i, batch, seq).items()}
+        bpcs.append(float(ev(st, b)["bpc"]))
+    return {"mode": mode, "corpus": corpus_name, "cell": cell,
+            "val_bpc": round(float(np.mean(bpcs)), 4),
+            "train_curve_bpc": curve, "steps": steps, "hidden": hidden,
+            "seconds": round(dt, 1), "state": st, "cfg": cfg}
+
+
+def rnn_size_kb(d_in: int, hidden: int, mode: str, layers: int = 1,
+                layer2_in: int | None = None) -> float:
+    """Paper-style weight size (KByte = 1000 B) of the recurrent matrices."""
+    bits = {"fp": 32, "binary": 1, "binaryconnect": 1, "ternary": 2,
+            "twn": 2, "ttq": 2, "dorefa3": 3, "dorefa4": 4}[mode]
+    n = d_in * 4 * hidden + hidden * 4 * hidden
+    if layers == 2:
+        n += (layer2_in or hidden) * 4 * hidden + hidden * 4 * hidden
+    return round(n * bits / 8 / 1000, 1)
+
+
+def write(name: str, rows, meta=None):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    payload = {"meta": meta or {}, "rows": rows}
+    (RESULTS / f"{name}.json").write_text(json.dumps(payload, indent=1,
+                                                     default=str))
+    return payload
+
+
+def strip(rows):
+    """Drop non-serializable training artifacts before writing."""
+    return [{k: v for k, v in r.items() if k not in ("state", "cfg")}
+            for r in rows]

@@ -1,0 +1,95 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # all tables
+  PYTHONPATH=src python -m benchmarks.run --quick    # smoke pass
+  PYTHONPATH=src python -m benchmarks.run --only table1_char_lm roofline
+
+Prints a compact CSV per table and writes results/benchmarks/*.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+from benchmarks import tables as T
+from benchmarks.common import REPO, RESULTS
+
+
+def roofline_report(quick=False):
+    """Aggregate results/dryrun/*.json into the §Roofline table."""
+    outdir = REPO / "results" / "dryrun"
+    rows = []
+    for p in sorted(outdir.glob("*.json")) if outdir.exists() else []:
+        c = json.loads(p.read_text())
+        if c["status"] == "ok":
+            r = c["roofline"]
+            rows.append({
+                "arch": c["arch"], "shape": c["shape"], "mesh": c["mesh"],
+                "t_compute_s": f"{r['t_compute_s']:.3e}",
+                "t_memory_s": f"{r['t_memory_s']:.3e}",
+                "t_collective_s": f"{r['t_collective_s']:.3e}",
+                "dominant": r["dominant"],
+                "useful_flop_ratio": round(r["useful_flop_ratio"], 3),
+                "roofline_fraction": round(r["roofline_fraction"], 4),
+            })
+        elif c["status"] == "skipped":
+            rows.append({"arch": c["arch"], "shape": c["shape"],
+                         "mesh": c["mesh"], "dominant": "N/A",
+                         "note": c["reason"][:60]})
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / "roofline_report.json").write_text(json.dumps(rows, indent=1))
+    return rows
+
+
+BENCHES = {
+    "table1_char_lm": T.table1_char_lm,
+    "table1b_convergence": T.table1b_convergence,
+    "table2_text8": T.table2_text8,
+    "table3_word_lm": T.table3_word_lm,
+    "table4_mnist": T.table4_mnist,
+    "table5_qa": T.table5_qa,
+    "table6_gru": T.table6_gru,
+    "table7_hardware": lambda quick=False: T.table7_hardware(),
+    "fig1b_variance": T.fig1b_stochastic_variance,
+    "fig2_generalization": T.fig2_generalization,
+    "fig3_batch_size": T.fig3_batch_size,
+    "roofline": roofline_report,
+}
+
+
+def _print_rows(name, rows):
+    print(f"\n=== {name} ===")
+    for r in rows:
+        if isinstance(r, dict):
+            print(",".join(f"{k}={v}" for k, v in r.items()
+                           if k not in ("train_curve_bpc",)))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args(argv)
+
+    names = args.only or list(BENCHES)
+    t_all = time.time()
+    failures = []
+    for name in names:
+        t0 = time.time()
+        try:
+            rows = BENCHES[name](quick=args.quick)
+            _print_rows(name, rows)
+            print(f"[{name}: {time.time() - t0:.1f}s]")
+        except Exception as e:  # keep the harness going; report at the end
+            failures.append((name, repr(e)))
+            print(f"[{name}: FAILED {e!r}]")
+    print(f"\ntotal {time.time() - t_all:.1f}s; "
+          f"{len(names) - len(failures)}/{len(names)} benches ok")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

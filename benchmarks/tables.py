@@ -1,0 +1,350 @@
+"""One benchmark per paper table/figure (reduced scale; exact-size columns).
+
+Each function returns printable rows and writes results/benchmarks/<name>.json.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import bnlstm as BL
+from repro.core import quantize as Q
+from repro.core.quantize import QuantSpec
+from repro.data.synth import seq_mnist_like
+from repro.train.optimizer import OptConfig, opt_init, opt_update
+
+
+# --- Table 1: char-level BPC, LSTM, quantized vs baselines -------------------
+
+def table1_char_lm(quick=False):
+    steps = 60 if quick else 200
+    modes = ["fp", "ternary", "binary", "binaryconnect"]
+    extra = [] if quick else ["twn", "dorefa3"]
+    rows = []
+    for corpus, d_in, hid_full in (("ptb", 50, 1000), ("linux", None, 512)):
+        vocab = C.corpus(corpus).vocab
+        for mode in modes + (extra if corpus == "ptb" else []):
+            r = C.train_rnn(corpus, mode, steps=steps)
+            r["size_kb_full"] = C.rnn_size_kb(vocab if d_in is None else d_in,
+                                              hid_full, mode)
+            rows.append(r)
+    out = C.strip(rows)
+    C.write("table1_char_lm", out,
+            meta={"note": "reduced hidden=128; size column at paper dims"})
+    return out
+
+
+# --- Table 1b: convergence-scale comparison -----------------------------------
+
+def table1b_convergence(quick=False):
+    """Closer to the paper's operating point (seq 100 as in Appendix C,
+    wider LSTM, longer training): the regime where BinaryConnect's missing
+    output normalization starts to bite while BN-ternary tracks fp.  The
+    short-horizon table1 rows deliberately keep this separate — at 200 steps
+    the BinaryConnect failure mode has not kicked in yet (documented in
+    EXPERIMENTS.md §Repro)."""
+    steps = 80 if quick else 500
+    rows = []
+    for mode in ("fp", "ternary", "binaryconnect"):
+        r = C.train_rnn("ptb", mode, hidden=256, steps=steps, seq=100,
+                        batch=16, lr=2e-3)
+        r["size_kb_full"] = C.rnn_size_kb(50, 1000, mode)
+        rows.append(r)
+    out = C.strip(rows)
+    C.write("table1b_convergence", out)
+    return out
+
+
+# --- Table 2: Text8 (size-dominated) -----------------------------------------
+
+def table2_text8(quick=False):
+    steps = 60 if quick else 150
+    rows = []
+    for mode in ("fp", "ternary", "binary"):
+        r = C.train_rnn("text8", mode, steps=steps)
+        n = 27 * 4 * 2000 + 2000 * 4 * 2000  # paper: LSTM-2000 on text8
+        bits = {"fp": 32, "ternary": 2, "binary": 1}[mode]
+        r["size_mb_full"] = round(n * bits / 8 / 1e6, 1)
+        rows.append(r)
+    out = C.strip(rows)
+    C.write("table2_text8", out)
+    return out
+
+
+# --- Table 3: word-level PTB (perplexity) ------------------------------------
+
+def table3_word_lm(quick=False):
+    steps = 60 if quick else 180
+    rows = []
+    for name, hidden_red, hidden_full, layers in (("small", 96, 300, 1),
+                                                  ("medium", 160, 650, 1)):
+        for mode in ("fp", "ternary", "binary", "binaryconnect"):
+            r = C.train_rnn("words", mode, hidden=hidden_red, steps=steps,
+                            seq=35)
+            r["model"] = name
+            r["val_ppl"] = round(float(np.exp(r["val_bpc"] * np.log(2))), 2)
+            r["size_kb_full"] = C.rnn_size_kb(10000, hidden_full, mode,
+                                              layers=layers)
+            rows.append(r)
+    out = C.strip(rows)
+    C.write("table3_word_lm", out,
+            meta={"note": "byte-corpus stand-in for 10k-word PTB; ppl=2^bpc"})
+    return out
+
+
+# --- Table 4: sequential MNIST ------------------------------------------------
+
+def table4_mnist(quick=False):
+    steps = 80 if quick else 300
+    side = 16  # reduced 16x16 'pixels' (paper: 28x28)
+    rows = []
+    for mode in ("fp", "ternary", "binary", "binaryconnect"):
+        cfg = BL.RNNConfig(vocab=2, d_hidden=64, quant=C.spec_for(mode),
+                           cell_norm=mode != "binaryconnect")
+        var = BL.rnn_lm_init(jax.random.PRNGKey(0), cfg)
+        params = var["params"]
+        # classification head on the LAST hidden state (paper: LSTM-100 +
+        # softmax classifier over the final state)
+        params["cls"] = {
+            "W": 0.1 * jax.random.normal(jax.random.PRNGKey(5),
+                                         (cfg.d_hidden, 10)),
+            "b": jnp.zeros((10,))}
+        opt_cfg = OptConfig(lr=2e-3)
+        opt = opt_init(params, opt_cfg)
+        bn_state = var["state"]
+
+        def step(params, opt, bn_state, batch, rng):
+            def lf(p):
+                tokens = (batch["pixels"][..., 0] > 0.5).astype(jnp.int32)
+                hs, new_bn = BL.rnn_lm_apply(
+                    {"params": {"layers": p["layers"], "head": p["head"]},
+                     "state": bn_state}, tokens, cfg, training=True, rng=rng,
+                    return_state=True, features_only=True)   # (B, T, H)
+                out = hs[:, -1] @ p["cls"]["W"] + p["cls"]["b"]
+                onehot = jax.nn.one_hot(batch["labels"], 10)
+                l = -jnp.mean(jnp.sum(jax.nn.log_softmax(out) * onehot, -1))
+                return l, (new_bn, out)
+
+            (l, (new_bn, out)), g = jax.value_and_grad(lf, has_aux=True)(params)
+            params, opt, _ = opt_update(g, opt, params, opt_cfg)
+            params = dict(params)
+            inner = {"layers": params["layers"], "head": params["head"]}
+            inner = BL.clip_masters(inner, cfg)
+            params.update(inner)
+            acc = jnp.mean((jnp.argmax(out, -1) == batch["labels"]))
+            return params, opt, new_bn, l, acc
+
+        jstep = jax.jit(step)
+        rng = jax.random.PRNGKey(1)
+        accs = []
+        for i in range(steps):
+            b = seq_mnist_like(i, 32, side=side)
+            b = {k: jnp.asarray(v) for k, v in b.items()}
+            rng, sub = jax.random.split(rng)
+            params, opt, bn_state, l, acc = jstep(params, opt, bn_state, b, sub)
+            accs.append(float(acc))
+        n = 1 * 4 * 100 + 100 * 4 * 100  # paper dims: LSTM-100, 1-dim input
+        bits = {"fp": 32, "ternary": 2, "binary": 1, "binaryconnect": 1}[mode]
+        rows.append({"mode": mode,
+                     "final_train_acc": round(float(np.mean(accs[-10:])), 3),
+                     "size_kb_full": round(n * bits / 8 / 1000, 1),
+                     "ops_kops_full": round(2 * n / 1000, 1)})
+    C.write("table4_mnist", rows)
+    return rows
+
+
+# --- Table 5: question answering (attentive-reader-lite) ----------------------
+
+def table5_qa(quick=False):
+    """Synthetic cloze: the answer token appears right after a marker in the
+    document; an attention readout over BN-GRU encodings must find it.
+    Exercises the paper's claim that the technique survives attention +
+    bidirectional recurrent encoders."""
+    steps = 80 if quick else 250
+    vocab, seq, B = 40, 24, 32
+    MARK = vocab - 1
+
+    def make_batch(step):
+        rng = np.random.default_rng(1000 + step)
+        doc = rng.integers(0, vocab - 1, size=(B, seq))
+        pos = rng.integers(0, seq - 1, size=B)
+        ans = rng.integers(0, vocab - 1, size=B)
+        doc[np.arange(B), pos] = MARK
+        doc[np.arange(B), pos + 1] = ans
+        return {"doc": doc.astype(np.int32), "ans": ans.astype(np.int32)}
+
+    rows = []
+    for mode in ("fp", "ternary", "binary", "binaryconnect"):
+        cfg = BL.RNNConfig(vocab=vocab, d_hidden=48, cell="gru",
+                           quant=C.spec_for(mode), cell_norm=False)
+        var = BL.rnn_lm_init(jax.random.PRNGKey(0), cfg)
+        params = var["params"]
+        params["qa"] = {"Wm": jnp.zeros((vocab, 48)),  # (logit-space readout)
+                        "w": jnp.zeros((48,)),
+                        "Wa": 0.01 * jax.random.normal(jax.random.PRNGKey(2),
+                                                       (vocab, vocab))}
+        opt_cfg = OptConfig(lr=3e-3)
+        opt = opt_init(params, opt_cfg)
+        bn_state = var["state"]
+
+        def step(params, opt, bn_state, batch, rng):
+            def lf(p):
+                enc, new_bn = BL.rnn_lm_apply(
+                    {"params": {"layers": p["layers"], "head": p["head"]},
+                     "state": bn_state}, batch["doc"], cfg, training=True,
+                    rng=rng, return_state=True)           # (B, T, vocab)
+                m = jnp.tanh(enc @ p["qa"]["Wm"])          # (B, T, 48)
+                s = jax.nn.softmax(m @ p["qa"]["w"], axis=-1)
+                r = jnp.einsum("bt,btv->bv", s, enc)
+                out = r @ p["qa"]["Wa"]
+                onehot = jax.nn.one_hot(batch["ans"], vocab)
+                l = -jnp.mean(jnp.sum(jax.nn.log_softmax(out) * onehot, -1))
+                return l, (new_bn, out)
+
+            (l, (new_bn, out)), g = jax.value_and_grad(lf, has_aux=True)(params)
+            params, opt, _ = opt_update(g, opt, params, opt_cfg)
+            inner = BL.clip_masters({"layers": params["layers"],
+                                     "head": params["head"]}, cfg)
+            params = dict(params)
+            params.update(inner)
+            acc = jnp.mean((jnp.argmax(out, -1) == batch["ans"]))
+            return params, opt, new_bn, l, acc
+
+        jstep = jax.jit(step)
+        rng = jax.random.PRNGKey(1)
+        accs = []
+        for i in range(steps):
+            b = {k: jnp.asarray(v) for k, v in make_batch(i).items()}
+            rng, sub = jax.random.split(rng)
+            params, opt, bn_state, l, acc = jstep(params, opt, bn_state, b, sub)
+            accs.append(float(acc))
+        rows.append({"mode": mode,
+                     "final_acc": round(float(np.mean(accs[-10:])), 3),
+                     "size_mb_full": round(
+                         (256 * 4 * 256 * 2 + 2 * 120000 * 256) *
+                         {"fp": 32, "ternary": 2, "binary": 1,
+                          "binaryconnect": 1}[mode] / 8 / 1e6, 1)})
+    C.write("table5_qa", rows)
+    return rows
+
+
+# --- Table 6: GRU char-level ---------------------------------------------------
+
+def table6_gru(quick=False):
+    steps = 60 if quick else 200
+    rows = []
+    for mode in ("fp", "ternary", "binary"):
+        r = C.train_rnn("ptb", mode, cell="gru", steps=steps)
+        n = 50 * 3 * 1000 + 1000 * 3 * 1000
+        bits = {"fp": 32, "ternary": 2, "binary": 1}[mode]
+        r["size_kb_full"] = round(n * bits / 8 / 1000, 1)
+        rows.append(r)
+    out = C.strip(rows)
+    C.write("table6_gru", out)
+    return out
+
+
+# --- Table 7: hardware (analytic ASIC model + TPU translation) ----------------
+
+def table7_hardware():
+    """Paper's ASIC numbers (from Table 7, as the published reference) next
+    to this framework's TPU-side translation computed from our dry-run."""
+    asic = [
+        {"design": "low-power", "precision": "fp12", "mac": 100,
+         "gops": 80, "area_mm2": 2.56, "power_mw": 336},
+        {"design": "low-power", "precision": "binary", "mac": 100,
+         "gops": 80, "area_mm2": 0.24, "power_mw": 37},
+        {"design": "low-power", "precision": "ternary", "mac": 100,
+         "gops": 80, "area_mm2": 0.42, "power_mw": 61},
+        {"design": "high-speed", "precision": "fp12", "mac": 100,
+         "gops": 80, "area_mm2": 2.56, "power_mw": 336},
+        {"design": "high-speed", "precision": "binary", "mac": 1000,
+         "gops": 800, "area_mm2": 2.54, "power_mw": 347},
+        {"design": "high-speed", "precision": "ternary", "mac": 500,
+         "gops": 400, "area_mm2": 2.16, "power_mw": 302},
+    ]
+    # derived claims the implementation must honor
+    derived = {
+        "speedup_binary": 800 / 80, "speedup_ternary": 400 / 80,
+        "area_saving_binary": round(2.56 / 0.24, 1),
+        "power_saving_binary": round(336 / 37, 1),
+        "mem_bw_saving_binary": 32 * 12 / 32,   # 12-bit fp vs 1-bit
+        "mem_bw_saving_ternary": 12 / 2,
+    }
+    # TPU translation: weight-stream bytes per decode token (qwen3-1.7b)
+    from repro.configs import get_config
+    from repro.launch.roofline import analytic_hbm_bytes
+    from repro.configs.shapes import ShapeSpec
+    cfg = get_config("qwen3-1.7b")
+    sh = ShapeSpec("decode", 1024, 1, "decode")
+    tpu = {}
+    for name, bits in (("bf16", 16), ("ternary_packed", 2),
+                       ("binary_packed", 1)):
+        tpu[name] = analytic_hbm_bytes(cfg, sh, 1, weight_bits=bits)
+    tpu_row = {"decode_hbm_bytes": {k: round(v / 1e6, 1) for k, v in tpu.items()},
+               "bandwidth_amplification_ternary":
+                   round(tpu["bf16"] / tpu["ternary_packed"], 2),
+               "bandwidth_amplification_binary":
+                   round(tpu["bf16"] / tpu["binary_packed"], 2)}
+    C.write("table7_hardware", asic, meta={"derived": derived, "tpu": tpu_row})
+    return asic + [derived, tpu_row]
+
+
+# --- figures -------------------------------------------------------------------
+
+def fig1b_stochastic_variance(quick=False):
+    """Variance of prediction quality under STOCHASTIC ternary sampling
+    (paper Fig. 1b: negligible)."""
+    r = C.train_rnn("ptb", "ternary", steps=40 if quick else 150)
+    st, cfg = r["state"], r["cfg"]
+    c = C.corpus("ptb")
+    b = {k: jnp.asarray(v) for k, v in c.batch("valid", 0, 16, 48).items()}
+
+    def eval_stochastic(rng):
+        loss, _ = BL.lm_loss({"params": st.params, "state": st.bn_state},
+                             b["tokens"], b["targets"], cfg, training=True,
+                             rng=rng)
+        return loss / jnp.log(2.0)
+
+    f = jax.jit(eval_stochastic)
+    n = 40 if quick else 200
+    bpcs = np.array([float(f(jax.random.PRNGKey(i))) for i in range(n)])
+    out = {"mean_bpc": round(float(bpcs.mean()), 4),
+           "std_bpc": round(float(bpcs.std()), 5),
+           "deterministic_bpc": r["val_bpc"], "n_samples": n}
+    C.write("fig1b_variance", [out])
+    return [out]
+
+
+def fig2_generalization(quick=False):
+    """Eval BPC at sequence lengths beyond training (paper Fig. 2b)."""
+    r = C.train_rnn("ptb", "ternary", steps=60 if quick else 200, seq=32)
+    st, cfg = r["state"], r["cfg"]
+    from repro.train.train_step import make_rnn_eval
+    ev = jax.jit(make_rnn_eval(cfg), static_argnames=())
+    c = C.corpus("ptb")
+    rows = []
+    for seq in (32, 64, 128):
+        b = {k: jnp.asarray(v) for k, v in c.batch("valid", 0, 8, seq).items()}
+        loss, _ = BL.lm_loss({"params": st.params, "state": st.bn_state},
+                             b["tokens"], b["targets"], cfg, training=False)
+        rows.append({"seq": seq, "bpc": round(float(loss / jnp.log(2.0)), 4)})
+    rows.append({"train_curve_bpc": r["train_curve_bpc"]})
+    C.write("fig2_generalization", rows)
+    return rows
+
+
+def fig3_batch_size(quick=False):
+    """Prediction quality vs training batch size (paper Fig. 3: BN-quantized
+    models need a non-trivial batch for stable statistics)."""
+    steps = 60 if quick else 150
+    rows = []
+    for batch in (2, 8, 32):
+        r = C.train_rnn("ptb", "ternary", steps=steps, batch=batch)
+        rows.append({"batch": batch, "val_bpc": r["val_bpc"]})
+    C.write("fig3_batch_size", rows)
+    return rows

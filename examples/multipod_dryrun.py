@@ -1,0 +1,22 @@
+"""Lower + compile one (arch x shape) cell on the 512-chip multi-pod mesh and
+print its memory/cost analysis — the smallest possible demonstration of the
+production distribution config.
+
+  PYTHONPATH=src python examples/multipod_dryrun.py llama3-8b decode_32k
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+if __name__ == "__main__":
+    arch = sys.argv[1] if len(sys.argv) > 1 else "qwen3-0.6b"
+    shape = sys.argv[2] if len(sys.argv) > 2 else "decode_32k"
+    # dryrun must own the process (XLA device-count flag before jax init)
+    raise SystemExit(subprocess.call(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", "multi", "--out",
+         str(REPO / "results" / "dryrun")],
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"},
+        cwd=REPO))

@@ -1,0 +1,18 @@
+"""Serve a small pool model with batched requests: prefill + sampled decode
+through the KV-cache runtime, with ternary (2-bit) weights at runtime.
+
+  PYTHONPATH=src python examples/serve_generate.py
+  PYTHONPATH=src python examples/serve_generate.py --arch mixtral-8x7b --gen 16
+
+This is a thin veneer over launch/serve.py — the same entry point that runs
+under the production mesh on a pod.
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    args = sys.argv[1:] or ["--arch", "qwen3-0.6b", "--reduced",
+                            "--quant", "ternary", "--prompt-len", "24",
+                            "--gen", "24", "--batch", "2"]
+    main(args)

@@ -1,0 +1,103 @@
+"""End-to-end driver: train the PAPER's character-level model (BN-LSTM with
+ternary recurrent weights, Appendix C hyperparameters scaled to this box) for
+a few hundred steps on a real byte corpus (this repository's source tree —
+the offline stand-in for Linux-Kernel), with checkpointing and preemption
+handling.
+
+  PYTHONPATH=src python examples/train_char_lm.py                 # ~200 steps
+  PYTHONPATH=src python examples/train_char_lm.py --hidden 1000 \
+      --steps 400 --mode binary                                   # paper scale
+
+Ctrl-C mid-run, then re-run with the same --ckpt-dir: training resumes
+exactly (stateless step-indexed data + atomic checkpoints).
+"""
+import argparse
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bnlstm as BL
+from repro.core.quantize import QuantSpec
+from repro.data.text import ByteCorpus
+from repro.train import checkpoint as CK
+from repro.train.fault_tolerance import RESTART_EXIT_CODE, PreemptionHandler
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import (make_rnn_eval, make_rnn_train_step,
+                                    train_state_init)
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="ternary",
+                    choices=("ternary", "binary", "none", "binaryconnect"))
+    ap.add_argument("--hidden", type=int, default=256)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seq", type=int, default=100)     # paper: 100
+    ap.add_argument("--lr", type=float, default=2e-3)   # paper: 0.002, ADAM
+    ap.add_argument("--data", default=str(REPO / "src"))
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    corpus = ByteCorpus.from_dir(Path(args.data))
+    print(f"corpus: {corpus.data.size / 1e6:.1f}M chars, vocab {corpus.vocab}")
+
+    quant = (QuantSpec(mode="none") if args.mode == "none"
+             else QuantSpec(mode=args.mode, norm="batch"))
+    cfg = BL.RNNConfig(vocab=corpus.vocab, d_hidden=args.hidden, quant=quant,
+                       cell_norm=args.mode != "binaryconnect")
+    var = BL.rnn_lm_init(jax.random.PRNGKey(0), cfg)
+    opt = OptConfig(kind="adamw", lr=args.lr)
+    state = train_state_init(var["params"], opt, jax.random.PRNGKey(1),
+                             bn_state=var["state"])
+    step = jax.jit(make_rnn_train_step(cfg, opt))
+    evaluate = jax.jit(make_rnn_eval(cfg))
+
+    start = 0
+    if args.ckpt_dir and CK.latest_step(args.ckpt_dir) is not None:
+        start = CK.latest_step(args.ckpt_dir)
+        state = CK.restore(state, args.ckpt_dir, start)
+        print(f"resumed from step {start}")
+    handler = PreemptionHandler()
+    ckpt = CK.AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
+
+    t0 = time.time()
+    for i in range(start, args.steps):
+        b = {k: jnp.asarray(v) for k, v in
+             corpus.batch("train", i, args.batch, args.seq).items()}
+        state, m = step(state, b)
+        if i % 20 == 0 or i == args.steps - 1:
+            vb = {k: jnp.asarray(v) for k, v in
+                  corpus.batch("valid", 0, args.batch, args.seq).items()}
+            val = evaluate(state, vb)
+            print(f"step {i:4d}  train bpc {float(m['bpc']):.3f}  "
+                  f"val bpc {float(val['bpc']):.3f}  "
+                  f"({(i - start + 1) / (time.time() - t0):.2f} steps/s)",
+                  flush=True)
+        if ckpt and i and i % 50 == 0:
+            ckpt.save_async(state, i)
+        if handler.preempted:
+            if ckpt:
+                ckpt.wait()
+                CK.save(state, args.ckpt_dir, i + 1)
+            print("preempted — checkpointed, exit 43")
+            sys.exit(RESTART_EXIT_CODE)
+    if ckpt:
+        ckpt.wait()
+        CK.save(state, args.ckpt_dir, args.steps)
+
+    # memory footprint at the paper's accounting (Table 1)
+    n = corpus.vocab * 4 * args.hidden + args.hidden * 4 * args.hidden
+    bits = {"ternary": 2, "binary": 1, "binaryconnect": 1, "none": 32}[args.mode]
+    print(f"recurrent weights: fp32 {n * 4 / 1e3:.0f} KB -> "
+          f"{args.mode} {n * bits / 8 / 1e3:.0f} KB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Architecture registry: every assigned arch + the paper's own RNN models."""
+from __future__ import annotations
+
+from importlib import import_module
+
+from repro.configs.base import ModelConfig
+
+_ARCH_MODULES = {
+    "llama3-8b": "llama3_8b",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "gemma3-27b": "gemma3_27b",
+    "rwkv6-7b": "rwkv6_7b",
+    "whisper-base": "whisper_base",
+    "llama-3.2-vision-90b": "llama32_vision_90b",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "mixtral-8x7b": "mixtral_8x7b",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_IDS}")
+    return import_module(f"repro.configs.{_ARCH_MODULES[name]}").config()

@@ -1,0 +1,61 @@
+"""The paper's own experimental model configurations (Tables 1-6).
+
+These are `RNNConfig`s for core/bnlstm.py, named after the paper's tasks.
+Sizes follow Appendix C exactly; the benchmark harness trains reduced-scale
+versions of the same configs (CPU container) and reports both the exact
+analytic memory sizes of the full configs and the measured quality of the
+reduced runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.bnlstm import RNNConfig
+from repro.core.quantize import QuantSpec
+
+
+def _rnn(vocab, hidden, layers=1, cell="lstm", mode="ternary") -> RNNConfig:
+    return RNNConfig(vocab=vocab, d_hidden=hidden, n_layers=layers, cell=cell,
+                     quant=QuantSpec(mode=mode, norm="batch"))
+
+
+# --- character-level LM (Table 1, 2, 6) ------------------------------------
+# PTB: 1000 units, vocab ~50 chars; War&Peace / Linux Kernel: 512 units.
+def char_ptb(cell="lstm", mode="ternary") -> RNNConfig:
+    return _rnn(50, 1000, cell=cell, mode=mode)
+
+
+def char_war_peace(cell="lstm", mode="ternary") -> RNNConfig:
+    return _rnn(87, 512, cell=cell, mode=mode)
+
+
+def char_linux(cell="lstm", mode="ternary") -> RNNConfig:
+    return _rnn(101, 512, cell=cell, mode=mode)
+
+
+def char_text8(mode="ternary") -> RNNConfig:
+    return _rnn(27, 2000, mode=mode)
+
+
+# --- word-level LM (Table 3) ------------------------------------------------
+def word_ptb_small(mode="ternary") -> RNNConfig:
+    return _rnn(10000, 300, mode=mode)
+
+
+def word_ptb_medium(mode="ternary") -> RNNConfig:
+    return _rnn(10000, 650, mode=mode)
+
+
+def word_ptb_large(mode="ternary") -> RNNConfig:
+    return _rnn(10000, 1500, layers=2, mode=mode)
+
+
+# --- sequential MNIST (Table 4): 100 units, pixel-by-pixel -------------------
+def seq_mnist(mode="ternary") -> RNNConfig:
+    # vocab field doubles as input dim for the classification wrapper
+    return _rnn(256, 100, mode=mode)
+
+
+def reduced(cfg: RNNConfig, hidden: int = 64) -> RNNConfig:
+    """CPU-scale variant of the same config (same code paths)."""
+    return dataclasses.replace(cfg, d_hidden=hidden)

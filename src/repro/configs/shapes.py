@@ -1,0 +1,82 @@
+"""The assigned input-shape set and per-(arch x shape) input specs.
+
+`input_specs(cfg, shape_name)` returns ShapeDtypeStruct stand-ins for every
+input of the step being lowered — weak-type-correct, shardable, no device
+allocation — plus which step function the cell lowers ('train' | 'prefill' |
+'decode').
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """(is_applicable, reason-if-not).  long_500k needs sub-quadratic
+    attention; pure full-attention archs skip it (DESIGN.md §5)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch — long_500k needs sub-quadratic attention"
+    return True, ""
+
+
+def whisper_dec_len(S: int) -> int:
+    return min(448, max(64, S // 8))
+
+
+def token_batch(cfg: ModelConfig, B: int, S: int) -> dict:
+    """Train-step inputs as ShapeDtypeStructs."""
+    i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+    bf = lambda *s: jax.ShapeDtypeStruct(s, jnp.dtype(cfg.dtype))
+    if cfg.family == "audio":
+        d = whisper_dec_len(S)
+        return {"tokens": i32(B, d), "targets": i32(B, d),
+                "enc_frames": bf(B, S, cfg.d_model)}
+    batch = {"tokens": i32(B, S), "targets": i32(B, S)}
+    if cfg.family == "vlm":
+        batch["img"] = bf(B, cfg.n_img_tokens, cfg.d_model)
+    return batch
+
+
+def prefill_inputs(cfg: ModelConfig, B: int, S: int) -> dict:
+    i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+    bf = lambda *s: jax.ShapeDtypeStruct(s, jnp.dtype(cfg.dtype))
+    if cfg.family == "audio":
+        return {"tokens": i32(B, whisper_dec_len(S)),
+                "enc_frames": bf(B, S, cfg.d_model)}
+    out = {"tokens": i32(B, S)}
+    if cfg.family == "vlm":
+        out["img"] = bf(B, cfg.n_img_tokens, cfg.d_model)
+    return out
+
+
+def decode_inputs(cfg: ModelConfig, B: int) -> dict:
+    return {"token": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+
+def decode_context(cfg: ModelConfig, S: int) -> tuple[int, int]:
+    """(self-attn context, cross source length) for a decode cell at context S."""
+    if cfg.family == "audio":
+        return whisper_dec_len(S), S  # decoder ctx, encoder frames in cross-KV
+    src = cfg.n_img_tokens if cfg.family == "vlm" else 0
+    return S, src

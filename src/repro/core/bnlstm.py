@@ -1,0 +1,242 @@
+"""BN-LSTM / BN-GRU with learned recurrent binary/ternary weights.
+
+Faithful implementation of the paper's Algorithm 1 / Eq. (7):
+
+  * master weights W_{*h}, W_{*x} are fp32; they are quantized ONCE per forward
+    pass (before the time loop, Algorithm 1 lines 3-6),
+  * every vector-matrix product is batch-normalized with a learned scale phi
+    and additive term fixed to 0 (Eq. 7),
+  * the cell state is optionally batch-normalized with learned (phi_c, gamma_c)
+    (Algorithm 1 line 13),
+  * biases, BN parameters and the softmax classifier stay full-precision.
+
+The four gates (f, i, o, g) are fused into single (d, 4H) matmuls; BN is
+per-column so the fused form is mathematically identical to eight separate
+BN(W·) terms.  The time loop is a `jax.lax.scan`, so the HLO stays small and
+the same code path scales from the CPU tests to the pod-level dry run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantize as Q
+from repro.core.recurrent_bn import BNParams, BNState, bn_apply, bn_init
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class RNNConfig:
+    vocab: int
+    d_hidden: int
+    n_layers: int = 1
+    cell: str = "lstm"  # 'lstm' | 'gru'
+    quant: Q.QuantSpec = Q.QuantSpec(mode="ternary", norm="batch")
+    cell_norm: bool = True  # BN on the cell state (Algorithm 1 line 13)
+    eps: float = 1e-5
+    momentum: float = 0.99
+    dtype: Any = jnp.float32
+
+    @property
+    def n_gates(self) -> int:
+        return 4 if self.cell == "lstm" else 3
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(key, d_in: int, cfg: RNNConfig) -> dict:
+    h, g = cfg.d_hidden, cfg.n_gates
+    kx, kh = jax.random.split(key)
+    ax = Q.glorot_alpha(d_in, g * h)
+    ah = Q.glorot_alpha(h, g * h)
+    wx = jax.random.uniform(kx, (d_in, g * h), cfg.dtype, -ax, ax)
+    wh = jax.random.uniform(kh, (h, g * h), cfg.dtype, -ah, ah)
+    bn_x, bn_x_s = bn_init(g * h, dtype=cfg.dtype)
+    bn_h, bn_h_s = bn_init(g * h, dtype=cfg.dtype)
+    bn_c, bn_c_s = bn_init(h, dtype=cfg.dtype)
+    params = {
+        "wx": wx, "wh": wh, "b": jnp.zeros((g * h,), cfg.dtype),
+        "bn_x": bn_x, "bn_h": bn_h, "bn_c": bn_c,
+    }
+    state = {"bn_x": bn_x_s, "bn_h": bn_h_s, "bn_c": bn_c_s}
+    return {"params": params, "state": state}
+
+
+def rnn_lm_init(key, cfg: RNNConfig) -> dict:
+    """Returns {'params': trainable, 'state': BN running stats}."""
+    keys = jax.random.split(key, cfg.n_layers + 1)
+    layers = []
+    d_in = cfg.vocab
+    for l in range(cfg.n_layers):
+        layers.append(_layer_init(keys[l], d_in, cfg))
+        d_in = cfg.d_hidden
+    ks = keys[-1]
+    a = Q.glorot_alpha(cfg.d_hidden, cfg.vocab)
+    head = {"ws": jax.random.uniform(ks, (cfg.d_hidden, cfg.vocab), cfg.dtype, -a, a),
+            "bs": jnp.zeros((cfg.vocab,), cfg.dtype)}
+    return {
+        "params": {"layers": [l["params"] for l in layers], "head": head},
+        "state": {"layers": [l["state"] for l in layers]},
+    }
+
+
+# ---------------------------------------------------------------------------
+# quantize weights once per forward pass (Algorithm 1 lines 2-6)
+# ---------------------------------------------------------------------------
+
+
+def _quantized_weights(params, cfg: RNNConfig, rng: Optional[Array],
+                       training: bool = True):
+    out = []
+    stochastic = (cfg.quant.stochastic and training
+                  and cfg.quant.mode in ("binary", "ternary"))
+    for l, lp in enumerate(params["layers"]):
+        wx, wh = lp["wx"], lp["wh"]
+        ax = Q.glorot_alpha(*wx.shape)
+        ah = Q.glorot_alpha(*wh.shape)
+        if cfg.quant.enabled and stochastic:
+            if rng is None:
+                raise ValueError("stochastic quantization needs an rng key in training mode")
+            kx, kh = jax.random.split(jax.random.fold_in(rng, l))
+            ux = jax.random.uniform(kx, wx.shape, wx.dtype)
+            uh = jax.random.uniform(kh, wh.shape, wh.dtype)
+        else:
+            ux = uh = None
+        if cfg.quant.mode in ("binary", "ternary") and not stochastic:
+            # inference: deterministic expectation (paper Fig. 1b shows the
+            # stochastic/deterministic gap is negligible)
+            qx = Q.quantize(wx, cfg.quant.mode, ax, stochastic=False)
+            qh = Q.quantize(wh, cfg.quant.mode, ah, stochastic=False)
+        else:
+            qx = Q.apply_quant(wx, cfg.quant, ax, ux)
+            qh = Q.apply_quant(wh, cfg.quant, ah, uh)
+        out.append((qx, qh))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cells.  x_t arrives as int tokens for layer 0 (gather == one-hot matmul).
+# ---------------------------------------------------------------------------
+
+
+def _lstm_step(h, c, ax, ah, b, bn_c_p, bn_c_s, cfg: RNNConfig, training):
+    pre = ax + ah + b
+    f, i, o, g = jnp.split(pre, 4, axis=-1)
+    c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    if cfg.cell_norm:
+        cn, bn_c_s = bn_apply(c, bn_c_p, bn_c_s, training=training,
+                              eps=cfg.eps, momentum=cfg.momentum)
+    else:
+        cn = c
+    h = jax.nn.sigmoid(o) * jnp.tanh(cn)
+    return h, c, bn_c_s
+
+
+def _gru_step(h, ax_rz, ah_rz, ax_g, ah_g, b, training):
+    # ax_*, ah_* are already batch-normalized slices; b = (3H,)
+    b_r, b_z, b_g = jnp.split(b, 3, axis=-1)
+    r = jax.nn.sigmoid(ax_rz[0] + ah_rz[0] + b_r)
+    z = jax.nn.sigmoid(ax_rz[1] + ah_rz[1] + b_z)
+    g = jnp.tanh(ax_g + r * ah_g + b_g)
+    return (1.0 - z) * h + z * g
+
+
+def rnn_lm_apply(variables: dict, tokens: Array, cfg: RNNConfig, *,
+                 training: bool, rng: Optional[Array] = None,
+                 return_state: bool = False, features_only: bool = False):
+    """tokens: (B, T) int32.  Returns logits (B, T, vocab) and, when
+    `return_state`, the updated BN running stats.  `features_only` skips the
+    softmax head and returns the top layer's hidden states (B, T, H) —
+    classification tasks (sequential MNIST, QA readouts) attach their own
+    heads there."""
+    params, state = variables["params"], variables["state"]
+    B, T = tokens.shape
+    qw = _quantized_weights(params, cfg, rng, training=training)
+
+    x_seq = tokens  # layer 0 consumes token ids (gather == one-hot @ Wx)
+    new_state = {"layers": []}
+    for l in range(cfg.n_layers):
+        lp, ls = params["layers"][l], state["layers"][l]
+        qx, qh = qw[l]
+        h0 = jnp.zeros((B, cfg.d_hidden), cfg.dtype)
+        c0 = jnp.zeros((B, cfg.d_hidden), cfg.dtype)
+
+        if l == 0:
+            # (B,T) gather of quantized rows — identical to one-hot @ qx.
+            x_proj_seq = jnp.take(qx, x_seq, axis=0)  # (B, T, gH)
+        else:
+            x_proj_seq = jnp.einsum("btd,dg->btg", x_seq, qx)
+
+        if cfg.cell == "lstm":
+            def step(carry, x_proj_t):
+                h, c, s_x, s_h, s_c = carry
+                axn, s_x = bn_apply(x_proj_t, lp["bn_x"], s_x, training=training,
+                                    trainable_gamma=False, eps=cfg.eps, momentum=cfg.momentum)
+                ahn, s_h = bn_apply(h @ qh, lp["bn_h"], s_h, training=training,
+                                    trainable_gamma=False, eps=cfg.eps, momentum=cfg.momentum)
+                h, c, s_c = _lstm_step(h, c, axn, ahn, lp["b"], lp["bn_c"], s_c, cfg, training)
+                return (h, c, s_x, s_h, s_c), h
+
+            carry0 = (h0, c0, ls["bn_x"], ls["bn_h"], ls["bn_c"])
+            (hT, cT, s_x, s_h, s_c), hs = jax.lax.scan(
+                step, carry0, jnp.swapaxes(x_proj_seq, 0, 1))
+        else:  # gru
+            def step(carry, x_proj_t):
+                h, s_x, s_h = carry
+                axn, s_x = bn_apply(x_proj_t, lp["bn_x"], s_x, training=training,
+                                    trainable_gamma=False, eps=cfg.eps, momentum=cfg.momentum)
+                ahn, s_h = bn_apply(h @ qh, lp["bn_h"], s_h, training=training,
+                                    trainable_gamma=False, eps=cfg.eps, momentum=cfg.momentum)
+                H = cfg.d_hidden
+                ax_r, ax_z, ax_g = axn[..., :H], axn[..., H:2 * H], axn[..., 2 * H:]
+                ah_r, ah_z, ah_g = ahn[..., :H], ahn[..., H:2 * H], ahn[..., 2 * H:]
+                h = _gru_step(h, (ax_r, ax_z), (ah_r, ah_z), ax_g, ah_g, lp["b"], training)
+                return (h, s_x, s_h), h
+
+            carry0 = (h0, ls["bn_x"], ls["bn_h"])
+            (hT, s_x, s_h), hs = jax.lax.scan(step, carry0, jnp.swapaxes(x_proj_seq, 0, 1))
+            s_c = ls["bn_c"]
+
+        x_seq = jnp.swapaxes(hs, 0, 1)  # (B, T, H)
+        new_state["layers"].append({"bn_x": s_x, "bn_h": s_h, "bn_c": s_c})
+
+    if features_only:
+        out = x_seq
+    else:
+        out = jnp.einsum("bth,hv->btv", x_seq, params["head"]["ws"]) \
+            + params["head"]["bs"]
+    if return_state:
+        return out, new_state
+    return out
+
+
+def lm_loss(variables, tokens, targets, cfg: RNNConfig, *, training, rng=None):
+    """Mean next-token cross entropy (nats).  BPC = loss / ln(2)."""
+    logits, new_state = rnn_lm_apply(variables, tokens, cfg, training=training,
+                                     rng=rng, return_state=True)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll), new_state
+
+
+def clip_masters(params, cfg: RNNConfig):
+    """Post-update clip of master weights to [-alpha, alpha] (keeps Bernoulli
+    probabilities valid).  No-op for unquantized configs."""
+    if not cfg.quant.enabled:
+        return params
+    params = dict(params)
+    layers = []
+    for lp in params["layers"]:
+        lp = dict(lp)
+        lp["wx"] = Q.clip_master(lp["wx"], Q.glorot_alpha(*lp["wx"].shape))
+        lp["wh"] = Q.clip_master(lp["wh"], Q.glorot_alpha(*lp["wh"].shape))
+        layers.append(lp)
+    params["layers"] = layers
+    return params

@@ -1,0 +1,172 @@
+"""The paper's technique as a composable layer for arbitrary matmul stacks.
+
+Convention: any parameter-dict key starting with a capital 'W' is a
+*quantizable matmul weight*; everything else (embeddings, norms, biases,
+routers, decay vectors, BN/scale parameters) stays full precision — mirroring
+the paper's own split (Algorithm 1 quantizes the eight recurrent matrices and
+keeps biases/BN/softmax-classifier fp).
+
+`quantize_tree(params, spec, rng)` quantizes every such leaf ONCE per forward
+pass (paper Algorithm 1 lines 2-6), with straight-through gradients to the fp
+master leaves.  Stacked per-layer weights (leading scan dimension) are
+quantized in one shot, so the sampling sits OUTSIDE `lax.scan` exactly like the
+paper samples outside the time loop.
+
+For the transformer pool, the BN of Eq. (7) is adapted to a learnable
+per-output-channel scale (`norm='channel'`): companion leaves named
+'s<wname>' created at init and applied by `scaled()` at the call site.
+See DESIGN.md §2 for why batch statistics do not transfer to serving/TP.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantize as Q
+from repro.runtime import constrain_param
+
+Array = jax.Array
+
+
+def is_quantizable(path_key: str, spec: Optional[Q.QuantSpec] = None) -> bool:
+    if path_key.startswith("W"):
+        return True
+    # the paper keeps embeddings/classifier fp; the flag makes the trade
+    # explorable (embedding tables dominate small-model memory)
+    if spec is not None and spec.quantize_embeddings and \
+            path_key in ("embed", "head"):
+        return True
+    return False
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return "/".join(out)
+
+
+def leaf_alpha(shape) -> float:
+    """Glorot alpha from the matmul dims (last two axes; leading axes are
+    layer-stack / expert dims)."""
+    if len(shape) < 2:
+        return 1.0
+    return Q.glorot_alpha(int(shape[-2]), int(shape[-1]))
+
+
+def quantize_tree(params: Any, spec: Q.QuantSpec, rng: Optional[Array],
+                  compute_dtype=None) -> Any:
+    """Quantize every 'W*' leaf (STE); pass everything else through.
+
+    `compute_dtype` additionally casts the (quantized or fp) matmul weights
+    to the model's compute precision (bf16 on TPU) AFTER quantization — the
+    master weights and the STE path stay fp32, matching mixed-precision
+    practice and keeping matmuls on the MXU fast path.
+    """
+    def f(path, leaf):
+        name = _path_str(path)
+        last = path[-1].key if hasattr(path[-1], "key") else ""
+        if not is_quantizable(str(last), spec) or leaf.ndim < 2:
+            return leaf
+
+        def cast(w):
+            w = w.astype(compute_dtype) if compute_dtype is not None else w
+            # keep quantize+cast shard-local: the downstream all-gather then
+            # moves bf16 quantized values, not fp32 masters
+            return constrain_param(path, leaf, w)
+
+        def packed_roundtrip(q, alpha):
+            """quantize -> PACK (shard-local) -> gather uint32 codes over the
+            FSDP axes -> unpack on-chip.  Semantically identity on q; the
+            SPMD boundary lands on the 2-bit/1-bit codes (16x/32x fewer wire
+            bytes).  Sits inside stop_gradient via ste(), so no bwd bit ops."""
+            group = Q.TERNARY_GROUP if spec.mode == "ternary" else Q.BINARY_GROUP
+            K, N = q.shape[-2], q.shape[-1]
+            if K % group:
+                return cast(q)
+            lead = q.shape[:-2]
+            qs = jax.lax.stop_gradient(q).reshape((-1, K, N)) / alpha
+            pack = Q.pack_ternary if spec.mode == "ternary" else Q.pack_binary
+            unpack = Q.unpack_ternary if spec.mode == "ternary" else Q.unpack_binary
+            packed = jax.vmap(pack)(qs)
+            packed = packed.reshape(lead + (K // group, N))
+            packed = constrain_param(path, leaf, packed)
+            codes = packed.reshape((-1, K // group, N))
+            wq = jax.vmap(lambda c: unpack(c, K))(codes).reshape(lead + (K, N))
+            wq = (alpha * wq)
+            if compute_dtype is not None:
+                wq = wq.astype(compute_dtype)
+            # the unpacked copy takes the COMPUTE layout (consumer's view);
+            # every reshard from the storage layout happens on the codes
+            wq = constrain_param(path, leaf, wq, drop_axes=("data", "pod"),
+                                 kind="compute")
+            return Q.ste(leaf, wq)
+
+        def finish(q_with_ste, alpha):
+            if spec.packed_comms:
+                return packed_roundtrip(q_with_ste, alpha)
+            return cast(q_with_ste)
+
+        if not spec.enabled:
+            return cast(leaf)
+        alpha = leaf_alpha(leaf.shape)
+        if spec.mode in ("binary", "ternary") and spec.stochastic:
+            if rng is None:
+                raise ValueError("stochastic quantization requires rng")
+            k = jax.random.fold_in(rng, zlib.crc32(name.encode()) & 0x7FFFFFFF)
+            u = jax.random.uniform(k, leaf.shape, leaf.dtype)
+            return finish(Q.quantize(leaf, spec.mode, alpha, u, stochastic=True),
+                          alpha)
+        if spec.mode in ("binary", "ternary"):
+            return finish(Q.quantize(leaf, spec.mode, alpha, stochastic=False),
+                          alpha)
+        return cast(Q.apply_quant(leaf, spec, alpha, None))
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def clip_tree(params: Any, spec: Q.QuantSpec) -> Any:
+    """Clip master 'W*' leaves to [-alpha, alpha] after an optimizer step."""
+    if not spec.enabled or spec.mode not in ("binary", "ternary"):
+        return params
+
+    def f(path, leaf):
+        last = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if is_quantizable(last, spec) and leaf.ndim >= 2:
+            return Q.clip_master(leaf, leaf_alpha(leaf.shape))
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def winit(key, shape, dtype=jnp.float32) -> Array:
+    """Glorot-uniform init at the scale the quantizer expects."""
+    a = leaf_alpha(shape)
+    return jax.random.uniform(key, shape, dtype, -a, a)
+
+
+def maybe_scale(params: dict, wname: str, spec: Q.QuantSpec, d_out: int, dtype) -> None:
+    """Attach the per-output-channel scale companion for norm='channel'."""
+    if spec.enabled and spec.norm == "channel":
+        params["s" + wname[1:]] = jnp.ones((d_out,), dtype)
+
+
+def scaled(y: Array, params: dict, wname: str, spec: Q.QuantSpec) -> Array:
+    """Apply the channel-scale companion if configured."""
+    s = params.get("s" + wname[1:])
+    if spec.enabled and spec.norm == "channel" and s is not None:
+        return y * s.astype(y.dtype)
+    return y

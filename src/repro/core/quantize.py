@@ -1,0 +1,305 @@
+"""Learning recurrent binary/ternary weights (Ardakani et al., ICLR 2019) — core.
+
+Implements the paper's Eqs. (1), (4), (5), (6):
+
+  * normalize master weights by a fixed Glorot-initialized scale alpha,
+  * stochastically sample binary {-1,+1} / ternary {-1,0,+1} values from a
+    Bernoulli whose probability is the (clipped) normalized weight,
+  * straight-through estimator (STE) so gradients flow to the fp master weights,
+
+plus the deterministic inference variants, the literature baselines the paper
+compares against (BinaryConnect, TWN, TTQ, DoReFa k-bit), and bit-packing
+(1-bit / 2-bit) used by the serving path and the Pallas kernels.
+
+All functions are pure and jit/vmap/pjit friendly.  Stochasticity is driven by
+an explicit uniform-noise operand (not a PRNG key inside the quantizer) so the
+same code path is reusable inside Pallas kernels and trivially testable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# Scale alpha (paper: "alpha is a fixed scaling factor for all the weights and
+# initialized from Glorot & Bengio (2010)").
+# ---------------------------------------------------------------------------
+
+
+def glorot_alpha(fan_in: int, fan_out: int) -> float:
+    """Fixed per-matrix scale: the Glorot-uniform limit sqrt(6/(fan_in+fan_out))."""
+    return math.sqrt(6.0 / float(fan_in + fan_out))
+
+
+# ---------------------------------------------------------------------------
+# Straight-through estimator (Eq. 1):  dL/dW  ≈  dL/dW^{B/T}
+# Implemented as an identity-gradient wrapper around an arbitrary
+# non-differentiable forward transform.
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def _ste(w: Array, q: Array) -> Array:
+    """Returns q in the forward pass; gradient flows straight through to w."""
+    del w
+    return q
+
+
+def _ste_fwd(w, q):
+    del w
+    return q, None
+
+
+def _ste_bwd(_, g):
+    # Gradient w.r.t. the master weights is the incoming gradient (Eq. 1);
+    # the quantized branch gets no gradient (it is a sample, not a parameter).
+    return g, jnp.zeros_like(g)
+
+
+_ste.defvjp(_ste_fwd, _ste_bwd)
+
+
+def ste(master: Array, quantized: Array) -> Array:
+    """Straight-through: forward=quantized, backward=identity to master."""
+    return _ste(master, jax.lax.stop_gradient(quantized))
+
+
+# ---------------------------------------------------------------------------
+# Stochastic binary / ternary quantization (Eqs. 4-6).
+# ---------------------------------------------------------------------------
+
+
+def _normalize(w: Array, alpha: Array | float) -> Array:
+    """w^N = clip(w / alpha, -1, 1).  The clip realizes the Bernoulli-probability
+    domain [0,1]; master weights are additionally clipped after each update
+    (see `clip_master`), so this is a no-op at steady state."""
+    return jnp.clip(w / alpha, -1.0, 1.0)
+
+
+def binarize_stochastic(w: Array, u: Array, alpha: Array | float) -> Array:
+    """Eq. (4)+(6): P(w=+1) = (w^N + 1)/2, sample, map to {-alpha, +alpha}.
+
+    `u` is uniform(0,1) noise of w's shape.  Forward-only (no STE here).
+    """
+    wn = _normalize(w, alpha)
+    p_one = (wn + 1.0) * 0.5
+    b = jnp.where(u < p_one, 1.0, -1.0).astype(w.dtype)
+    return alpha * b
+
+
+def ternarize_stochastic(w: Array, u: Array, alpha: Array | float) -> Array:
+    """Eq. (5)+(6): P(w=±1) = |w^N| (sign of w), P(w=0) = 1-|w^N|."""
+    wn = _normalize(w, alpha)
+    nonzero = (u < jnp.abs(wn)).astype(w.dtype)
+    t = nonzero * jnp.sign(wn).astype(w.dtype)
+    return alpha * t
+
+
+def binarize_deterministic(w: Array, alpha: Array | float) -> Array:
+    """Inference-time expectation argmax: sign(w^N) in {-1,+1} (sign(0):=+1)."""
+    wn = _normalize(w, alpha)
+    return alpha * jnp.where(wn >= 0, 1.0, -1.0).astype(w.dtype)
+
+
+def ternarize_deterministic(w: Array, alpha: Array | float) -> Array:
+    """Inference-time MAP value: round(w^N) in {-1,0,+1}."""
+    wn = _normalize(w, alpha)
+    return alpha * jnp.round(wn).astype(w.dtype)
+
+
+def quantize(
+    w: Array,
+    mode: str,
+    alpha: Array | float,
+    u: Optional[Array] = None,
+    *,
+    stochastic: bool = True,
+    with_ste: bool = True,
+) -> Array:
+    """The paper's quantizer as a single entry point.
+
+    mode: 'binary' | 'ternary' | 'none' (passthrough)
+    u:    uniform noise (required when stochastic=True and mode != 'none')
+    """
+    if mode == "none":
+        return w
+    if stochastic:
+        if u is None:
+            raise ValueError("stochastic quantization requires uniform noise u")
+        q = (binarize_stochastic if mode == "binary" else ternarize_stochastic)(w, u, alpha)
+    else:
+        q = (binarize_deterministic if mode == "binary" else ternarize_deterministic)(w, alpha)
+    return ste(w, q) if with_ste else q
+
+
+def clip_master(w: Array, alpha: Array | float) -> Array:
+    """Keep master weights inside [-alpha, alpha] after an optimizer step so the
+    Bernoulli probabilities stay in [0,1] (BinaryConnect-style clipping, which
+    the paper inherits)."""
+    return jnp.clip(w, -alpha, alpha)
+
+
+# ---------------------------------------------------------------------------
+# Literature baselines the paper compares against (Tables 1-4).
+# ---------------------------------------------------------------------------
+
+
+def binaryconnect(w: Array) -> Array:
+    """BinaryConnect (Courbariaux et al. 2015), deterministic: alpha*sign(w)
+    with a single per-matrix scale alpha = E|w| and NO output normalization.
+    This is the method the paper shows *fails* on LSTMs (Table 1: 4.24 BPC)."""
+    alpha = jnp.mean(jnp.abs(w))
+    q = alpha * jnp.where(w >= 0, 1.0, -1.0).astype(w.dtype)
+    return ste(w, q)
+
+
+def twn(w: Array) -> Array:
+    """Ternary Weight Networks (Li & Liu 2016): threshold delta = 0.7*E|w|,
+    alpha = E[|w| : |w|>delta] (L2-optimal scale for the ternary support)."""
+    delta = 0.7 * jnp.mean(jnp.abs(w))
+    mask = (jnp.abs(w) > delta).astype(w.dtype)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    alpha = jnp.sum(jnp.abs(w) * mask) / denom
+    q = alpha * mask * jnp.sign(w)
+    return ste(w, q)
+
+
+def ttq(w: Array, alpha_pos: Array, alpha_neg: Array) -> Array:
+    """Trained Ternary Quantization (Zhu et al. 2016): asymmetric *learned*
+    scales for the positive / negative supports; threshold 0.05*max|w|."""
+    delta = 0.05 * jnp.max(jnp.abs(w))
+    pos = (w > delta).astype(w.dtype)
+    neg = (w < -delta).astype(w.dtype)
+    q = alpha_pos * pos - alpha_neg * neg
+    # STE to master weights; alphas receive real gradients through q's scale.
+    return ste(w, jax.lax.stop_gradient(q)) + (q - jax.lax.stop_gradient(q))
+
+
+def dorefa(w: Array, bits: int) -> Array:
+    """DoReFa-Net weight quantization to `bits` bits (Zhou et al. 2016)."""
+    if bits == 1:
+        return binaryconnect(w)
+    t = jnp.tanh(w)
+    wn = t / (2.0 * jnp.max(jnp.abs(t))) + 0.5  # [0,1]
+    n = float(2**bits - 1)
+    q = 2.0 * (jnp.round(wn * n) / n) - 1.0
+    return ste(w, q * jnp.max(jnp.abs(w)))
+
+
+# ---------------------------------------------------------------------------
+# Bit packing.  Ternary: 2-bit codes {0b00: 0, 0b01: +1, 0b11: -1}, 16 / uint32.
+# Binary: 1-bit codes {0: -1, 1: +1}, 32 / uint32.  Packing is along the
+# *leading* (contraction) axis so a (K, N) weight packs to (K/16, N) — each
+# lane of a VMEM tile unpacks independently (TPU-friendly: no cross-lane
+# shuffles, just shift/and/select on the VPU).
+# ---------------------------------------------------------------------------
+
+TERNARY_GROUP = 16  # weights per uint32 (2 bits each)
+BINARY_GROUP = 32  # weights per uint32 (1 bit each)
+
+
+def pack_ternary(q: Array) -> Array:
+    """Pack ternary values in {-1,0,+1} (any float/int dtype), shape (K, N)
+    with K % 16 == 0, into uint32 of shape (K//16, N)."""
+    k, n = q.shape
+    if k % TERNARY_GROUP:
+        raise ValueError(f"K={k} not a multiple of {TERNARY_GROUP}")
+    codes = jnp.where(q > 0, 1, jnp.where(q < 0, 3, 0)).astype(jnp.uint32)
+    codes = codes.reshape(k // TERNARY_GROUP, TERNARY_GROUP, n)
+    shifts = (2 * jnp.arange(TERNARY_GROUP, dtype=jnp.uint32))[None, :, None]
+    return jnp.sum(codes << shifts, axis=1, dtype=jnp.uint32)
+
+
+def unpack_ternary(packed: Array, k: int, dtype=jnp.float32) -> Array:
+    """Inverse of pack_ternary -> (k, N) array of {-1,0,+1}."""
+    kg, n = packed.shape
+    if kg * TERNARY_GROUP != k:
+        raise ValueError(f"packed K {kg}*16 != {k}")
+    shifts = (2 * jnp.arange(TERNARY_GROUP, dtype=jnp.uint32))[None, :, None]
+    codes = (packed[:, None, :] >> shifts) & jnp.uint32(3)
+    vals = jnp.where(codes == 1, 1.0, jnp.where(codes == 3, -1.0, 0.0)).astype(dtype)
+    return vals.reshape(k, n)
+
+
+def pack_binary(q: Array) -> Array:
+    """Pack binary values in {-1,+1}, shape (K, N), K % 32 == 0 -> uint32 (K//32, N)."""
+    k, n = q.shape
+    if k % BINARY_GROUP:
+        raise ValueError(f"K={k} not a multiple of {BINARY_GROUP}")
+    bits = (q > 0).astype(jnp.uint32).reshape(k // BINARY_GROUP, BINARY_GROUP, n)
+    shifts = jnp.arange(BINARY_GROUP, dtype=jnp.uint32)[None, :, None]
+    return jnp.sum(bits << shifts, axis=1, dtype=jnp.uint32)
+
+
+def unpack_binary(packed: Array, k: int, dtype=jnp.float32) -> Array:
+    kg, n = packed.shape
+    if kg * BINARY_GROUP != k:
+        raise ValueError(f"packed K {kg}*32 != {k}")
+    shifts = jnp.arange(BINARY_GROUP, dtype=jnp.uint32)[None, :, None]
+    bits = (packed[:, None, :] >> shifts) & jnp.uint32(1)
+    vals = (bits.astype(dtype) * 2.0 - 1.0).astype(dtype)
+    return vals.reshape(k, n)
+
+
+def packed_nbytes(shape: tuple[int, ...], mode: str) -> int:
+    """Analytic serialized size of a packed weight (for the paper's size tables)."""
+    k = int(np.prod(shape[:-1]))
+    n = shape[-1]
+    if mode == "binary":
+        return math.ceil(k / BINARY_GROUP) * n * 4
+    if mode == "ternary":
+        return math.ceil(k / TERNARY_GROUP) * n * 4
+    return k * n * 4  # fp32
+
+
+# ---------------------------------------------------------------------------
+# Quantization spec carried by configs.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """How the paper's technique is applied to a model's matmuls."""
+
+    mode: str = "none"  # none | binary | ternary | binaryconnect | twn | dorefa2..4
+    stochastic: bool = True  # Bernoulli sampling (train); False -> deterministic
+    norm: str = "batch"  # 'batch' (paper Eq.7, for RNNs) | 'channel' (transformer adaptation) | 'none'
+    quantize_embeddings: bool = False  # paper keeps classifier/embedding fp
+    # beyond-paper: route the FSDP/TP weight all-gathers through the 2-bit/
+    # 1-bit PACKED representation (quantize+pack shard-local, gather uint32
+    # codes, unpack on-chip).  16x/32x fewer wire bytes than fp32 masters —
+    # the paper's memory-bandwidth claim applied to the interconnect.
+    packed_comms: bool = False
+
+    @property
+    def enabled(self) -> bool:
+        return self.mode != "none"
+
+    @property
+    def weight_bits(self) -> float:
+        return {"binary": 1, "binaryconnect": 1, "ternary": 2, "twn": 2,
+                "dorefa2": 2, "dorefa3": 3, "dorefa4": 4}.get(self.mode, 32)
+
+
+def apply_quant(w: Array, spec: QuantSpec, alpha: Array | float, u: Optional[Array]) -> Array:
+    """Dispatch a weight matrix through the configured quantizer (training path)."""
+    m = spec.mode
+    if m == "none":
+        return w
+    if m in ("binary", "ternary"):
+        return quantize(w, m, alpha, u, stochastic=spec.stochastic)
+    if m == "binaryconnect":
+        return binaryconnect(w)
+    if m == "twn":
+        return twn(w)
+    if m.startswith("dorefa"):
+        return dorefa(w, int(m[len("dorefa"):]))
+    raise ValueError(f"unknown quant mode {m!r}")

@@ -1,0 +1,66 @@
+"""Batch normalization for recurrent networks (paper Eq. 3).
+
+  BN(x; phi, gamma) = gamma + phi * (x - E[x]) / sqrt(V[x] + eps)
+
+Training uses current-minibatch statistics (per time step — the statistics are
+recomputed at every step of the scan, matching the paper's "estimations ... for
+the current minibatch").  Running averages are accumulated across steps and used
+for inference, following Laurent et al. (2016); the paper does not prescribe
+per-timestep inference statistics and its batch-size study (Fig. 3) uses shared
+running statistics.
+
+Functional style: `bn_apply(x, p, s, training)` returns `(y, new_state)` where
+state carries running mean/var.  Under pjit the batch mean/var are *global*
+(XLA turns the batch-axis reduction into a cross-replica reduction), so the
+distributed semantics match single-device training exactly.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class BNParams(NamedTuple):
+    phi: Array  # multiplicative (paper's phi)
+    gamma: Array  # additive (paper's gamma; fixed 0 for gate pre-activations)
+
+
+class BNState(NamedTuple):
+    mean: Array
+    var: Array
+    count: Array  # number of updates folded into the running stats
+
+
+def bn_init(features: int, *, phi_init: float = 0.1, gamma_init: float = 0.0,
+            dtype=jnp.float32) -> tuple[BNParams, BNState]:
+    """phi_init=0.1 follows recurrent-BN practice (Cooijmans et al. 2016):
+    small phi keeps the sigmoid/tanh pre-activations in their linear regime."""
+    p = BNParams(phi=jnp.full((features,), phi_init, dtype),
+                 gamma=jnp.full((features,), gamma_init, dtype))
+    s = BNState(mean=jnp.zeros((features,), dtype), var=jnp.ones((features,), dtype),
+                count=jnp.zeros((), dtype))
+    return p, s
+
+
+def bn_apply(x: Array, p: BNParams, s: BNState, *, training: bool,
+             trainable_gamma: bool = True, eps: float = 1e-5,
+             momentum: float = 0.99) -> tuple[Array, BNState]:
+    """x: (batch, features).  Returns normalized x and updated running stats."""
+    if training:
+        mean = jnp.mean(x, axis=0)
+        var = jnp.var(x, axis=0)
+        new_s = BNState(
+            mean=momentum * s.mean + (1.0 - momentum) * jax.lax.stop_gradient(mean),
+            var=momentum * s.var + (1.0 - momentum) * jax.lax.stop_gradient(var),
+            count=s.count + 1.0,
+        )
+    else:
+        mean, var = s.mean, s.var
+        new_s = s
+    gamma = p.gamma if trainable_gamma else jax.lax.stop_gradient(p.gamma)
+    y = gamma + p.phi * (x - mean) * jax.lax.rsqrt(var + eps)
+    return y, new_s

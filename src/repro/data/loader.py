@@ -1,0 +1,78 @@
+"""Device feeding: sharded placement + double-buffered host->device prefetch.
+
+`shard_batch` places a host batch with the batch axis sharded over the data
+axes of the current mesh.  `Prefetcher` overlaps the host-side batch
+assembly and H2D copy of step k+1..k+depth with the device compute of step k
+(one of the DESIGN.md distributed-optimization items)."""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def batch_sharding(mesh: Optional[Mesh]) -> Optional[NamedSharding]:
+    if mesh is None:
+        return None
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return NamedSharding(mesh, P(axes if len(axes) > 1 else (axes[0] if axes else None)))
+
+
+def shard_batch(batch: dict, mesh: Optional[Mesh]) -> dict:
+    sh = batch_sharding(mesh)
+
+    def put(x):
+        if sh is None:
+            return jax.device_put(x)
+        spec = P(sh.spec[0], *([None] * (np.ndim(x) - 1)))
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return {k: put(v) for k, v in batch.items()}
+
+
+class Prefetcher:
+    """Pulls batches from `make_batch(step)` on a worker thread, `depth`
+    steps ahead, placing them on device.  Stateless upstream (step-indexed)
+    means dropping the queue on restart loses nothing."""
+
+    def __init__(self, make_batch: Callable[[int], dict], start_step: int,
+                 mesh: Optional[Mesh] = None, depth: int = 2):
+        self.make_batch = make_batch
+        self.mesh = mesh
+        self.q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._step = start_step
+        self._thread = threading.Thread(target=self._work, daemon=True)
+        self._thread.start()
+
+    def _work(self):
+        step = self._step
+        while not self._stop.is_set():
+            try:
+                b = shard_batch(self.make_batch(step), self.mesh)
+            except Exception as e:  # surface errors on the consumer side
+                self.q.put(e)
+                return
+            self.q.put((step, b))
+            step += 1
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        item = self.q.get()
+        if isinstance(item, Exception):
+            raise item
+        return item
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self.q.get_nowait()
+        except queue.Empty:
+            pass

@@ -1,0 +1,109 @@
+"""jit'd public wrappers around the Pallas kernels: padding to block
+multiples, alpha scaling, dtype handling, and a serving-oriented
+`PackedLinear` that stores weights packed in HBM."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import (BINARY_GROUP, TERNARY_GROUP, pack_binary,
+                                 pack_ternary)
+from repro.kernels import packed_matmul as PK
+
+Array = jax.Array
+
+
+def _pad_to(x: Array, m: int, axis: int) -> Array:
+    r = x.shape[axis] % m
+    if r == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, m - r)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "mode", "interpret"))
+def packed_matmul(x: Array, wp: Array, k: int, alpha=1.0, *, mode: str = "ternary",
+                  interpret: Optional[bool] = None) -> Array:
+    """y = alpha * (x @ unpack(wp)).  x: (..., K); wp: (K/G, N) uint32.
+
+    Leading batch dims are flattened into M; M/N/K padded to block multiples.
+    """
+    group = TERNARY_GROUP if mode == "ternary" else BINARY_GROUP
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    N = wp.shape[1]
+    xm = x.reshape(-1, K)
+    M = xm.shape[0]
+
+    bm = 128 if M >= 128 else 8
+    bn = 128
+    bk = 256 if K % 256 == 0 else group * 8
+    xm = _pad_to(_pad_to(xm, bm, 0), bk, 1)
+    wpp = _pad_to(_pad_to(wp, bk // group, 0), bn, 1)
+    y = PK.packed_matmul(xm, wpp, xm.shape[1], mode=mode,
+                         block=(bm, bn, bk), interpret=interpret)
+    y = y[:M, :N] * jnp.asarray(alpha, jnp.float32)
+    return y.reshape(*lead, N)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
+def quantize_pack(w: Array, u: Array, alpha, *, mode: str = "ternary",
+                  interpret: Optional[bool] = None) -> Array:
+    """Fused stochastic quantize (paper Eq. 4-6) + bit-pack.  w: (K, N) with
+    K % GROUP == 0 (weights in this framework are 128-aligned)."""
+    group = TERNARY_GROUP if mode == "ternary" else BINARY_GROUP
+    K, N = w.shape
+    bk = min(256, K) if K % 256 == 0 or K <= 256 else group * 8
+    while K % bk:
+        bk //= 2
+    bk = max(bk, group)
+    bn = min(256, N)
+    while N % bn:
+        bn //= 2
+    return PK.quantize_pack(w.astype(jnp.float32), u.astype(jnp.float32),
+                            alpha, mode=mode, block=(bk, bn),
+                            interpret=interpret)
+
+
+@dataclasses.dataclass
+class PackedLinear:
+    """Serving-side layer: weights stored packed (2-bit/1-bit) in HBM.
+
+    Built once from trained master weights (deterministic quantization —
+    paper Fig. 1b shows the stochastic/deterministic gap is negligible);
+    every apply streams GROUPx fewer weight bytes than fp32.
+    """
+
+    wp: Array          # (K/G, N) uint32
+    k: int
+    alpha: float
+    mode: str
+    scale: Optional[Array] = None  # channel scale companion (norm='channel')
+
+    @classmethod
+    def from_master(cls, w: Array, alpha: float, mode: str,
+                    scale: Optional[Array] = None) -> "PackedLinear":
+        wn = jnp.clip(w / alpha, -1.0, 1.0)
+        if mode == "ternary":
+            q = jnp.round(wn)
+            wp = pack_ternary(q)
+        else:
+            q = jnp.where(wn >= 0, 1.0, -1.0)
+            wp = pack_binary(q)
+        return cls(wp=wp, k=w.shape[0], alpha=float(alpha), mode=mode, scale=scale)
+
+    def __call__(self, x: Array, *, interpret: Optional[bool] = None) -> Array:
+        y = packed_matmul(x, self.wp, self.k, self.alpha, mode=self.mode,
+                          interpret=interpret)
+        if self.scale is not None:
+            y = y * self.scale
+        return y.astype(x.dtype)
+
+    @property
+    def nbytes(self) -> int:
+        return self.wp.size * 4

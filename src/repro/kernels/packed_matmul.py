@@ -1,0 +1,145 @@
+"""Pallas TPU kernels: matmul against 2-bit (ternary) / 1-bit (binary) packed
+weights, and fused stochastic quantize+pack.
+
+This is the TPU-native translation of the paper's MAC-free ASIC engine
+(DESIGN.md §2): the ±1/0 weights live PACKED in HBM (16x / 32x fewer weight
+bytes than fp32), are decoded to bf16 inside VMEM by the VPU (shift/and/
+select — no cross-lane work since packing is along the contraction axis), and
+the MXU consumes the decoded tile.  Decode-bound GEMV/GEMM arithmetic
+intensity rises by the packing factor, which is exactly where the paper's
+"12x memory bandwidth" claim lands on a TPU.
+
+Tiling: grid (M/bm, N/bn, K/bk), K innermost so the fp32 VMEM accumulator
+carries across the K loop; all dims MXU-aligned (multiples of 8/128).  The
+packed operand's K axis is bk/GROUP uint32 rows per tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.core.quantize import BINARY_GROUP, TERNARY_GROUP
+
+Array = jax.Array
+
+
+def _unpack_ternary_tile(packed: Array, bk: int) -> Array:
+    """(bk/16, bn) uint32 -> (bk, bn) float32 in {-1, 0, +1}."""
+    shifts = (2 * jnp.arange(TERNARY_GROUP, dtype=jnp.uint32))[None, :, None]
+    codes = (packed[:, None, :] >> shifts) & jnp.uint32(3)
+    vals = jnp.where(codes == 1, 1.0, jnp.where(codes == 3, -1.0, 0.0))
+    return vals.reshape(bk, packed.shape[-1])
+
+
+def _unpack_binary_tile(packed: Array, bk: int) -> Array:
+    """(bk/32, bn) uint32 -> (bk, bn) float32 in {-1, +1}."""
+    shifts = jnp.arange(BINARY_GROUP, dtype=jnp.uint32)[None, :, None]
+    bits = (packed[:, None, :] >> shifts) & jnp.uint32(1)
+    vals = bits.astype(jnp.float32) * 2.0 - 1.0
+    return vals.reshape(bk, packed.shape[-1])
+
+
+def _matmul_kernel(x_ref, wp_ref, o_ref, acc_ref, *, bk: int, mode: str):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    unpack = _unpack_ternary_tile if mode == "ternary" else _unpack_binary_tile
+    w = unpack(wp_ref[...], bk).astype(x_ref.dtype)
+    acc_ref[...] += jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def packed_matmul(x: Array, wp: Array, k: int, *, mode: str,
+                  block: tuple[int, int, int] = (128, 128, 256),
+                  interpret: bool | None = None) -> Array:
+    """x: (M, K) fp; wp: (K/G, N) uint32 packed -> (M, N) fp32 (unscaled).
+
+    M, N, K must already be multiples of the block dims (ops.py pads).
+    """
+    group = TERNARY_GROUP if mode == "ternary" else BINARY_GROUP
+    M, K = x.shape
+    N = wp.shape[1]
+    if K != k or wp.shape[0] * group != K:
+        raise ValueError(f"packed K mismatch: {wp.shape[0]}*{group} != {K}")
+    bm, bn, bk = block
+    if M % bm or N % bn or K % bk or bk % group:
+        raise ValueError(f"blocks {block} must divide {(M, N, K)} (bk % {group} == 0)")
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+
+    kernel = functools.partial(_matmul_kernel, bk=bk, mode=mode)
+    return pl.pallas_call(
+        kernel,
+        grid=(M // bm, N // bn, K // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk // group, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+        name=f"{mode}_packed_matmul",
+    )(x, wp)
+
+
+# ---------------------------------------------------------------------------
+# fused stochastic quantize + pack
+# ---------------------------------------------------------------------------
+
+
+def _qpack_kernel(w_ref, u_ref, alpha_ref, o_ref, *, mode: str):
+    a = alpha_ref[0, 0]
+    wn = jnp.clip(w_ref[...] / a, -1.0, 1.0)
+    bk, bn = wn.shape
+    if mode == "ternary":
+        nz = u_ref[...] < jnp.abs(wn)
+        t = jnp.where(nz, jnp.sign(wn), 0.0)
+        codes = jnp.where(t > 0, 1, jnp.where(t < 0, 3, 0)).astype(jnp.uint32)
+        g = TERNARY_GROUP
+        shifts = (2 * jnp.arange(g, dtype=jnp.uint32))[None, :, None]
+    else:
+        p_one = (wn + 1.0) * 0.5
+        codes = (u_ref[...] < p_one).astype(jnp.uint32)
+        g = BINARY_GROUP
+        shifts = jnp.arange(g, dtype=jnp.uint32)[None, :, None]
+    c = codes.reshape(bk // g, g, bn)
+    o_ref[...] = jnp.sum(c << shifts, axis=1, dtype=jnp.uint32)
+
+
+def quantize_pack(w: Array, u: Array, alpha, *, mode: str,
+                  block: tuple[int, int] = (256, 256),
+                  interpret: bool | None = None) -> Array:
+    """Fused Eq.(4-6) sampling + bit-packing.  w, u: (K, N); returns packed
+    uint32 (K/G, N).  Noise is an explicit operand (Pallas-portable PRNG)."""
+    group = TERNARY_GROUP if mode == "ternary" else BINARY_GROUP
+    K, N = w.shape
+    bk, bn = block
+    if K % bk or N % bn or bk % group:
+        raise ValueError(f"blocks {block} must divide {(K, N)} (bk % {group} == 0)")
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    alpha = jnp.asarray(alpha, jnp.float32).reshape(1, 1)
+
+    kernel = functools.partial(_qpack_kernel, mode=mode)
+    return pl.pallas_call(
+        kernel,
+        grid=(K // bk, N // bn),
+        in_specs=[
+            pl.BlockSpec((bk, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bk, bn), lambda i, j: (i, j)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((bk // group, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((K // group, N), jnp.uint32),
+        interpret=interpret,
+        name=f"{mode}_quantize_pack",
+    )(w, u, alpha)

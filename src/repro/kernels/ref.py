@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These define the semantics; the kernels must match them (tests sweep shapes
+and dtypes and assert allclose in interpret mode).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import (pack_binary, pack_ternary, unpack_binary,
+                                 unpack_ternary)
+
+Array = jax.Array
+
+
+def ternary_matmul_ref(x: Array, wp: Array, k: int, alpha: float = 1.0) -> Array:
+    """x: (M, K) @ alpha * unpack(wp (K//16, N)) -> (M, N) fp32."""
+    w = unpack_ternary(wp, k, dtype=x.dtype)
+    return alpha * jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def binary_matmul_ref(x: Array, wp: Array, k: int, alpha: float = 1.0) -> Array:
+    w = unpack_binary(wp, k, dtype=x.dtype)
+    return alpha * jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def quantize_pack_ternary_ref(w: Array, u: Array, alpha: float) -> Array:
+    """Stochastic ternarize (paper Eq. 5/6) then 2-bit pack."""
+    wn = jnp.clip(w / alpha, -1.0, 1.0)
+    nz = (u < jnp.abs(wn)).astype(w.dtype)
+    t = nz * jnp.sign(wn)
+    return pack_ternary(t)
+
+
+def quantize_pack_binary_ref(w: Array, u: Array, alpha: float) -> Array:
+    """Stochastic binarize (paper Eq. 4/6) then 1-bit pack."""
+    wn = jnp.clip(w / alpha, -1.0, 1.0)
+    p_one = (wn + 1.0) * 0.5
+    b = jnp.where(u < p_one, 1.0, -1.0).astype(w.dtype)
+    return pack_binary(b)

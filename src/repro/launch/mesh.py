@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) = 256 chips, axes (data, model).
+Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model) — 'pod' is an
+outer data-parallel axis whose gradient all-reduce crosses DCN.
+
+Defined as functions (not module constants) so importing this module never
+touches jax device state — the dry-run must set XLA_FLAGS before first init.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — run "
+            f"under dryrun.py (it forces 512 host devices) or on the pod")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_host_mesh(model: int = 1):
+    """Best-effort mesh over whatever is locally available (tests, CPU)."""
+    n = len(jax.devices())
+    model = math.gcd(model, n)
+    data = n // model
+    if model > 1:
+        return jax.make_mesh((data, model), ("data", "model"))
+    return jax.make_mesh((n,), ("data",))

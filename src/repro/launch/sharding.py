@@ -1,0 +1,202 @@
+"""Parameter / state / cache PartitionSpec rules for the production mesh.
+
+Weight layout (DESIGN.md §4): TP over 'model' (column-parallel up-projections,
+row-parallel down-projections, expert axis for MoE, vocab axis for embedding
+and head), FSDP over 'data' on the other matmul dim.  XLA SPMD then emits the
+ZeRO-3-style all-gather-on-use + reduce-scatter-on-grad schedule.  Axes that
+do not divide a dimension are dropped (replicated) so one rule set serves
+every (arch x mesh) cell.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.mamba2 import SSMState
+from repro.models.rwkv6 import RWKVState
+from repro.serve.kvcache import AttnCache, CrossCache, kv_pspec
+from repro.runtime import use_mesh
+
+# row-parallel (input dim on 'model'): projections whose input is the
+# model-sharded hidden (attention heads / ffn hidden / ssm inner).
+ROW_W = {"Wo", "Wdown", "Wfc2", "Wout", "Wcv"}
+
+
+def _fit(dim: int, axis: str, mesh: Mesh) -> Optional[str]:
+    n = mesh.shape.get(axis, 1)
+    return axis if n > 1 and dim % n == 0 else None
+
+
+def _key_str(p) -> str:
+    for attr in ("key", "idx", "name"):
+        if hasattr(p, attr):
+            return str(getattr(p, attr))
+    return str(p)
+
+
+def param_pspec(path, leaf, mesh: Mesh) -> P:
+    keys = [_key_str(p) for p in path]
+    name = keys[-1] if keys else ""
+    shape = leaf.shape
+    nd = len(shape)
+
+    if name == "embed":
+        return P(_fit(shape[0], "model", mesh), _fit(shape[1], "data", mesh))
+    if name == "head":
+        return P(_fit(shape[0], "data", mesh), _fit(shape[1], "model", mesh))
+    if name.startswith("W") and nd >= 2:
+        lead = [None] * (nd - 2)
+        if "moe" in keys and nd >= 3:
+            # (.., E, din, dout): expert-parallel over 'model', FSDP over
+            # 'data'.  When E doesn't divide the model axis (mixtral: 8
+            # experts, 16-way TP) fall back to tensor parallelism INSIDE the
+            # experts (shard d_ff over 'model'), matching moe_apply's einsums.
+            lead = [None] * (nd - 3)
+            e_ax = _fit(shape[-3], "model", mesh)
+            if e_ax is not None:
+                return P(*lead, e_ax, _fit(shape[-2], "data", mesh), None)
+            if name in ROW_W:  # (E, f, d): f on model, d on data
+                return P(*lead, None, _fit(shape[-2], "model", mesh),
+                         _fit(shape[-1], "data", mesh))
+            return P(*lead, None, _fit(shape[-2], "data", mesh),
+                     _fit(shape[-1], "model", mesh))
+        if name in ROW_W:
+            return P(*lead, _fit(shape[-2], "model", mesh),
+                     _fit(shape[-1], "data", mesh))
+        return P(*lead, _fit(shape[-2], "data", mesh),
+                 _fit(shape[-1], "model", mesh))
+    # 1D / small parameters: replicated
+    return P()
+
+
+def param_shardings(params: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_pspec(path, leaf, mesh)),
+        params)
+
+
+def _drop(spec: P, axes=("data", "pod")) -> P:
+    def keep(a):
+        if a is None:
+            return None
+        if isinstance(a, tuple):
+            kept = tuple(x for x in a if x not in axes)
+            return kept if len(kept) > 1 else (kept[0] if kept else None)
+        return None if a in axes else a
+
+    return P(*[keep(a) for a in spec])
+
+
+def serve_param_pspec(path, leaf, mesh: Mesh) -> P:
+    """Serving layout: tensor-parallel only (weights replicated across the
+    data axes) — no optimizer shards to co-locate with, and dropping the
+    FSDP axis removes the per-token weight all-gather from the decode step."""
+    return _drop(param_pspec(path, leaf, mesh))
+
+
+def compute_param_pspec(path, leaf, mesh: Mesh) -> P:
+    """Layout of the transient COMPUTE copy of a weight (bf16 / unpacked):
+    what its matmul actually consumes — the storage layout minus the FSDP
+    axes (TP sharding kept).
+
+    Note (§Perf, refuted hypothesis): for non-divisible MoE experts we tried
+    returning P() (fully replicated) so the model-axis reshard would also
+    ride the packed codes; measured wire went UP 48% (9.8s vs 6.7s) because
+    SPMD then re-materialized full-size gathers at the dot's convert — the
+    capacity-sharded expert einsums genuinely want f-sharded weights."""
+    return _drop(param_pspec(path, leaf, mesh))
+
+
+def serve_param_shardings(params: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, serve_param_pspec(path, leaf, mesh)),
+        params)
+
+
+def state_shardings(state: Any, mesh: Mesh) -> Any:
+    """TrainState shardings: params/opt-moments/residual follow param rules,
+    scalars and rng replicated, RNN bn_state replicated (O(d) vectors)."""
+    pshard = param_shardings(state.params, mesh)
+    rep = NamedSharding(mesh, P())
+    rep_tree = lambda t: jax.tree.map(lambda _: rep, t)
+    return state._replace(
+        params=pshard,
+        opt=state.opt._replace(
+            step=rep,
+            m=pshard if state.opt.m is not None else None,
+            v=pshard if state.opt.v is not None else None,
+        ),
+        rng=rep,
+        bn_state=rep_tree(state.bn_state) if state.bn_state is not None else None,
+        residual=pshard if state.residual is not None else None,
+    )
+
+
+def batch_shardings(batch: Any, mesh: Mesh) -> Any:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    spec = axes if len(axes) > 1 else (axes[0] if axes else None)
+
+    def one(x):
+        b = spec
+        import math
+        n = math.prod(mesh.shape[a] for a in axes) if axes else 1
+        if n > 1 and x.shape[0] % n != 0:
+            b = None
+        return NamedSharding(mesh, P(b, *([None] * (len(x.shape) - 1))))
+
+    return jax.tree.map(one, batch)
+
+
+def _bd(mesh: Mesh, batch: int):
+    axes, prod = [], 1
+    for a in ("pod", "data"):
+        n = mesh.shape.get(a, 1)
+        if n > 1 and batch % (prod * n) == 0:
+            axes.append(a)
+            prod *= n
+    return tuple(axes) if len(axes) > 1 else (axes[0] if axes else None)
+
+
+def cache_shardings(caches: Any, mesh: Mesh) -> Any:
+    """Walk the cache pytree (AttnCache/CrossCache/SSMState/RWKVState nodes
+    possibly stacked with a leading repeat axis) and assign specs."""
+    m = mesh.shape.get("model", 1)
+    rep = NamedSharding(mesh, P())
+
+    def kv_like(shape):  # (.., B, C, H, hd)
+        lead = [None] * (len(shape) - 4)
+        B, C, H = shape[-4], shape[-3], shape[-2]
+        with use_mesh(mesh):
+            spec = kv_pspec(B, C, H)
+        return NamedSharding(mesh, P(*lead, *spec))
+
+    def node(c):
+        if isinstance(c, AttnCache):
+            s = kv_like(c.k.shape)
+            return AttnCache(k=s, v=s, pos=rep, ring=c.ring)
+        if isinstance(c, CrossCache):
+            s = kv_like(c.k.shape)
+            return CrossCache(k=s, v=s)
+        if isinstance(c, SSMState):
+            lead = [None] * (c.h.ndim - 4)
+            B, H = c.h.shape[-4], c.h.shape[-3]
+            bd = _bd(mesh, B)
+            h = NamedSharding(mesh, P(*lead, bd, _fit(H, "model", mesh), None, None))
+            conv = NamedSharding(mesh, P(*lead, bd, None,
+                                         _fit(c.conv.shape[-1], "model", mesh)))
+            return SSMState(h=h, conv=conv, pos=rep)
+        if isinstance(c, RWKVState):
+            lead = [None] * (c.S.ndim - 4)
+            B, H = c.S.shape[-4], c.S.shape[-3]
+            bd = _bd(mesh, B)
+            S = NamedSharding(mesh, P(*lead, bd, _fit(H, "model", mesh), None, None))
+            sh = NamedSharding(mesh, P(*lead, bd, _fit(c.tm_shift.shape[-1], "model", mesh)))
+            return RWKVState(S=S, tm_shift=sh, cm_shift=sh, pos=rep)
+        raise TypeError(type(c))
+
+    return jax.tree.map(node, caches,
+                        is_leaf=lambda x: isinstance(
+                            x, (AttnCache, CrossCache, SSMState, RWKVState)))

@@ -1,0 +1,169 @@
+"""Training launcher: data -> prefetch -> pjit step -> checkpoint/restart.
+
+Runs at every scale with the same code path:
+  * CPU/dev box:  python -m repro.launch.train --arch qwen3-0.6b --reduced \
+                      --steps 50
+  * pod/fleet:    the same command under the TPU runtime with --mesh-model 16
+                  (the launcher builds the largest feasible mesh from
+                  jax.devices() via train/elastic.py, so losing hosts between
+                  restarts re-shapes automatically — elastic scaling).
+
+Fault-tolerance contract: SIGTERM => checkpoint + exit 43 (launcher restarts
+with --resume auto); checkpoints are atomic; the data pipeline is step-
+indexed so restart is sample-exact.  A per-step EWMA straggler monitor logs
+slow hosts (single-host here; the record() feed is a collective on fleets).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core.quantize import QuantSpec
+from repro.data.loader import Prefetcher
+from repro.data.synth import token_stream
+from repro.data.text import ByteCorpus
+from repro.launch.sharding import (batch_shardings, param_pspec,
+                                   state_shardings)
+from repro.runtime import use_mesh
+from repro.train import checkpoint as CK
+from repro.train.elastic import best_mesh_shape, make_mesh_from_plan
+from repro.train.fault_tolerance import (RESTART_EXIT_CODE, PreemptionHandler,
+                                         StepTimer, StragglerMonitor)
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import make_train_step, train_state_init
+from repro.models import transformer as T
+
+
+def build_argparser():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen3-0.6b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config of the same family")
+    ap.add_argument("--quant", default=None,
+                    choices=("none", "binary", "ternary"),
+                    help="override the config's weight quantization")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh-model", type=int, default=1)
+    ap.add_argument("--data", default="synthetic",
+                    help="'synthetic' | path to a text file/dir")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", default="none", choices=("none", "auto"))
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    return ap
+
+
+def main(argv=None):
+    args = build_argparser().parse_args(argv)
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.quant is not None:
+        cfg = cfg.with_quant(QuantSpec(mode=args.quant, norm="channel")
+                             if args.quant != "none" else QuantSpec(mode="none"))
+
+    # --- data --------------------------------------------------------------
+    if args.data == "synthetic":
+        vocab = cfg.vocab
+        make_batch = lambda s: token_stream(s, args.batch, args.seq, vocab,
+                                            seed=args.seed)
+    else:
+        p = Path(args.data)
+        corpus = (ByteCorpus.from_dir(p) if p.is_dir()
+                  else ByteCorpus.from_files([p]))
+        if corpus.vocab > cfg.vocab:
+            raise SystemExit(f"corpus vocab {corpus.vocab} > model {cfg.vocab}")
+        make_batch = lambda s: corpus.batch("train", s, args.batch, args.seq)
+
+    # --- mesh (elastic: derive from live devices) ---------------------------
+    n_dev = len(jax.devices())
+    mesh = None
+    if n_dev > 1:
+        plan = best_mesh_shape(n_dev, want_model=args.mesh_model,
+                               global_batch=args.batch)
+        mesh = make_mesh_from_plan(plan)
+        print(f"mesh: {dict(zip(plan.axes, plan.shape))}, "
+              f"per-replica batch {plan.per_replica_batch}, "
+              f"dropped {plan.dropped_devices} devices")
+
+    opt_cfg = OptConfig(kind="adamw", lr=args.lr, warmup_steps=args.warmup,
+                        decay_steps=args.steps, clip_norm=1.0)
+
+    params = T.model_init(jax.random.PRNGKey(args.seed), cfg)
+    state = train_state_init(params, opt_cfg, jax.random.PRNGKey(args.seed + 1),
+                             compress=args.compress_grads)
+    step_fn = make_train_step(cfg, opt_cfg, mesh=mesh,
+                              compress_grads=args.compress_grads)
+
+    start_step = 0
+    ckpt = None
+    if args.ckpt_dir:
+        ckpt = CK.AsyncCheckpointer(args.ckpt_dir)
+        if args.resume == "auto" and CK.latest_step(args.ckpt_dir) is not None:
+            start_step = CK.latest_step(args.ckpt_dir)
+            state = CK.restore(state, args.ckpt_dir, start_step)
+            print(f"resumed from step {start_step}")
+
+    if mesh is not None:
+        st_sh = state_shardings(state, mesh)
+        b_sh = batch_shardings(make_batch(0), mesh)
+        jstep = jax.jit(step_fn, in_shardings=(st_sh, b_sh),
+                        out_shardings=(st_sh, None))
+    else:
+        jstep = jax.jit(step_fn)
+
+    handler = PreemptionHandler()
+    monitor = StragglerMonitor(n_hosts=jax.process_count())
+    prefetch = Prefetcher(make_batch, start_step, mesh=mesh)
+
+    t_start = time.time()
+    with use_mesh(mesh, param_rules=param_pspec):
+        for step, batch in prefetch:
+            if step >= args.steps:
+                break
+            with StepTimer() as tm:
+                state, metrics = jstep(state, batch)
+                jax.block_until_ready(metrics["loss"])
+            monitor.record(jax.process_index(), tm.dt)
+
+            if step % args.log_every == 0 or step == args.steps - 1:
+                loss = float(metrics["loss"])
+                print(f"step {step:6d} loss {loss:.4f} "
+                      f"lr {float(metrics.get('lr', 0)):.2e} "
+                      f"gnorm {float(metrics.get('grad_norm', 0)):.2f} "
+                      f"{tm.dt*1e3:.0f} ms", flush=True)
+            if ckpt and step > 0 and step % args.ckpt_every == 0:
+                ckpt.save_async(state, step)
+            if handler.preempted:
+                print("preempted: checkpointing and exiting 43", flush=True)
+                if ckpt:
+                    ckpt.wait()
+                    CK.save(state, args.ckpt_dir, step + 1)
+                prefetch.close()
+                sys.exit(RESTART_EXIT_CODE)
+
+    prefetch.close()
+    if ckpt:
+        ckpt.wait()
+        CK.save(state, args.ckpt_dir, args.steps)
+    dt = time.time() - t_start
+    print(f"done: {args.steps - start_step} steps in {dt:.1f}s "
+          f"({(args.steps - start_step) / max(dt, 1e-9):.2f} steps/s)")
+    return state
+
+
+if __name__ == "__main__":
+    main()

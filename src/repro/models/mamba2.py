@@ -1,0 +1,211 @@
+"""Mamba2 (SSD) mixer — chunked selective-state-space recurrence.
+
+Used by `zamba2-1.2b` (hybrid).  TPU-native formulation:
+
+  * the sequence is processed in chunks of `cfg.ssm_chunk`; within a chunk the
+    recurrence is a dense (Q x Q) causally-masked matmul (MXU work), across
+    chunks a `lax.scan` carries the (H, N, P) state — this is the standard
+    SSD block-decomposition and maps the "recurrence" onto matmuls instead of
+    a length-S scalar scan (length-S scans are VPU-serial on TPU).
+  * in/out projections are 'W*' quantizable leaves (the paper's technique);
+    the SSM dynamics parameters (A, dt bias, conv, D) are O(d) and stay fp,
+    mirroring the paper keeping biases/BN parameters full-precision.
+
+Shapes: d_inner = expand * d_model, H = d_inner / headdim ssm heads,
+N = ssm_state, single B/C group (zamba2 uses n_groups=1).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qlinear import maybe_scale, scaled, winit
+from repro.runtime import constrain
+
+Array = jax.Array
+
+
+class SSMState(NamedTuple):
+    h: Array        # (B, H, N, P) inter-chunk state
+    conv: Array     # (B, K-1, conv_dim) causal-conv tail
+    pos: Array      # () int32 — tokens seen
+
+
+def _dims(cfg):
+    di = cfg.d_inner
+    H = cfg.ssm_heads
+    P = cfg.ssm_headdim
+    N = cfg.ssm_state
+    conv_dim = di + 2 * N  # x, B, C pass through the causal conv
+    return di, H, P, N, conv_dim
+
+
+def mamba2_init(key, cfg) -> dict:
+    d = cfg.d_model
+    di, H, P, N, conv_dim = _dims(cfg)
+    d_proj = 2 * di + 2 * N + H  # z, x, B, C, dt
+    ki, ko, kc, kd = jax.random.split(key, 4)
+    p = {
+        "Win": winit(ki, (d, d_proj)),
+        "Wout": winit(ko, (di, d)),
+        "conv_w": jax.random.normal(kc, (cfg.ssm_conv, conv_dim)) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,)),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)),  # A = -exp(A_log)
+        "D": jnp.ones((H,)),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(kd, (H,)) * (jnp.log(0.1) - jnp.log(1e-3))
+                    + jnp.log(1e-3)))),
+        "norm": jnp.ones((di,)),
+    }
+    maybe_scale(p, "Win", cfg.quant, d_proj, jnp.float32)
+    maybe_scale(p, "Wout", cfg.quant, d, jnp.float32)
+    return p
+
+
+def _causal_conv(x: Array, w: Array, b: Array, tail: Optional[Array] = None):
+    """x: (B, S, C) depthwise causal conv with kernel (K, C).  `tail` is the
+    last K-1 inputs from the previous call (decode); returns (y, new_tail)."""
+    K = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    new_tail = xp[:, -(K - 1):, :] if K > 1 else tail
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i].astype(x.dtype) for i in range(K))
+    return jax.nn.silu(y + b.astype(x.dtype)), new_tail
+
+
+def ssd_chunked(x: Array, dt: Array, A: Array, Bm: Array, Cm: Array,
+                chunk: int, h0: Optional[Array] = None) -> Tuple[Array, Array]:
+    """Chunked SSD scan.
+
+    x:  (B, S, H, P)   dt: (B, S, H)   A: (H,) (negative)
+    Bm, Cm: (B, S, N)  (single group, broadcast over heads)
+    h0: optional (B, H, N, P) initial state.
+    Returns (y (B, S, H, P), h_final (B, H, N, P)).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    S0_len = S
+    if S % Q:
+        # zero-pad to a chunk multiple: dt=0 gives decay exp(0)=1 and zero
+        # state increment, so the final state is exact.
+        pad = Q - S % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // Q
+
+    r = lambda t: t.reshape(Bsz, nc, Q, *t.shape[2:])
+    x, dt, Bm, Cm = r(x), r(dt), r(Bm), r(Cm)
+
+    dA = dt * A  # (B, nc, Q, H) — negative
+    cum = jnp.cumsum(dA, axis=2)
+    seg_end = cum[:, :, -1, :]                     # total chunk decay (log)
+
+    # intra-chunk: att[i,j] = (C_i . B_j) * exp(cum_i - cum_j) * dt_j, i >= j
+    idx = jnp.arange(Q)
+    causal = idx[:, None] >= idx[None, :]
+    logdec = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Qi,Qj,H)
+    dec = jnp.where(causal[None, None, :, :, None], jnp.exp(logdec), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cm, Bm)               # (B,nc,Qi,Qj)
+    att = cb[..., None] * dec * dt[:, :, None, :, :]         # (B,nc,Qi,Qj,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", att, x)
+
+    # chunk states: S_c = sum_j exp(seg_end - cum_j) * dt_j * B_j x_j^T
+    w_state = jnp.exp(seg_end[:, :, None, :] - cum) * dt     # (B,nc,Q,H)
+    states = jnp.einsum("bcjh,bcjn,bcjhp->bchnp", w_state, Bm, x)
+
+    # inter-chunk scan over nc (tiny: S/Q iterations of an (H,N,P) op).
+    # The recurrent state is ALWAYS fp32 (decay products compound; bf16
+    # states drift over long contexts and break the scan carry dtype).
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    h0 = h0.astype(jnp.float32)
+    states = states.astype(jnp.float32)
+
+    def step(h, inp):
+        st, dec_tot = inp  # (B,H,N,P), (B,H)
+        h_out = h  # state entering this chunk
+        h = h * jnp.exp(dec_tot)[:, :, None, None] + st
+        return h, h_out
+
+    hT, h_in = jax.lax.scan(step, h0,
+                            (jnp.moveaxis(states, 1, 0), jnp.moveaxis(seg_end, 1, 0)))
+    h_in = jnp.moveaxis(h_in, 0, 1)                          # (B,nc,H,N,P)
+
+    # inter-chunk contribution: y_i += C_i . (exp(cum_i) * h_in)
+    y_inter = jnp.einsum("bcin,bchnp,bcih->bcihp", Cm, h_in, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y[:, :S0_len], hT
+
+
+def ssd_step(x: Array, dt: Array, A: Array, Bm: Array, Cm: Array, h: Array):
+    """Single-token recurrence (decode).  x: (B, H, P), dt: (B, H),
+    Bm/Cm: (B, N), h: (B, H, N, P) -> (y, h')."""
+    dA = jnp.exp(dt * A)                                     # (B, H)
+    inc = jnp.einsum("bh,bn,bhp->bhnp", dt, Bm, x)
+    h = h * dA[:, :, None, None] + inc
+    y = jnp.einsum("bn,bhnp->bhp", Cm, h)
+    return y, h
+
+
+def mamba2_apply(p: dict, x: Array, cfg, *, state: Optional[SSMState] = None,
+                 decode: bool = False) -> Tuple[Array, Optional[SSMState]]:
+    """x: (B, S, d_model). decode=True expects S == 1 and a state."""
+    Bsz, S, d = x.shape
+    di, H, P, N, conv_dim = _dims(cfg)
+
+    proj = scaled(x @ p["Win"], p, "Win", cfg.quant)
+    z, xin, Bc, Cc, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])
+
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    tail = state.conv if state is not None else None
+    conv_out, new_tail = _causal_conv(conv_in, p["conv_w"], p["conv_b"], tail)
+    xin, Bc, Cc = jnp.split(conv_out, [di, di + N], axis=-1)
+
+    xh = xin.reshape(Bsz, S, H, P)
+    xh = constrain(xh, ("pod", "data"), None, "model", None)
+    h0 = state.h if state is not None else None
+
+    if decode:
+        h0 = (h0 if h0 is not None
+              else jnp.zeros((Bsz, H, N, P), jnp.float32)).astype(jnp.float32)
+        y1, hT = ssd_step(xh[:, 0].astype(jnp.float32), dt[:, 0], A,
+                          Bc[:, 0].astype(jnp.float32),
+                          Cc[:, 0].astype(jnp.float32), h0)
+        y = y1[:, None]
+    else:
+        y, hT = ssd_chunked(xh, dt, A, Bc, Cc, cfg.ssm_chunk, h0)
+
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * xh.astype(y.dtype)
+    y = y.reshape(Bsz, S, di)
+
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    g = y * jax.nn.silu(z)
+    g32 = g.astype(jnp.float32)
+    g = (g32 * jax.lax.rsqrt(jnp.mean(g32 * g32, axis=-1, keepdims=True) + 1e-6)
+         ).astype(x.dtype) * p["norm"].astype(x.dtype)
+
+    out = scaled(g @ p["Wout"], p, "Wout", cfg.quant)
+    new_state = None
+    if state is not None or decode:
+        pos = (state.pos if state is not None else jnp.zeros((), jnp.int32)) + S
+        new_state = SSMState(h=hT, conv=new_tail, pos=pos)
+    return out, new_state
+
+
+def ssm_state_init(cfg, batch: int, dtype=jnp.float32) -> SSMState:
+    di, H, P, N, conv_dim = _dims(cfg)
+    return SSMState(
+        h=jnp.zeros((batch, H, N, P), jnp.float32),  # fp32 recurrent core
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        pos=jnp.zeros((), jnp.int32),
+    )

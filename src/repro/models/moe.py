@@ -1,0 +1,131 @@
+"""Mixture-of-Experts FFN (mixtral / qwen3-moe style): grouped capacity-based
+dense dispatch, shardable as EP over the 'model' mesh axis.
+
+Design notes (TPU / pjit):
+  * Routing is computed in fp32; the router weight 'router' stays
+    full-precision (accuracy-critical, <0.1% of params — DESIGN.md §5).
+  * GROUPED dispatch: tokens are split into groups of <= `group_size`
+    (sharded over the data axes) and routed with per-group capacity — the
+    standard Switch/GShard formulation.  The dispatch one-hots are
+    (G, Tg, E, C) so their footprint is bounded per group; an UNGROUPED
+    one-hot at 1M tokens/step would be O(T*E*C) ~ 10^13 elements.
+  * Dispatch/combine are einsums, so every tensor keeps static shapes, the
+    expert axis is a real array axis (pjit shards it over 'model' when E
+    divides the axis, lowering the exchange to all-to-alls) and, when E is
+    smaller than the axis (mixtral: 8 experts on 16 chips), the expert
+    matmuls fall back to plain tensor parallelism over d_ff.
+  * Expert weights are 'W*' leaves (E, d, f): the paper's binary/ternary
+    quantizer applies per expert matrix via quantize_tree, unchanged.
+  * Capacity overflow drops tokens (training); the decode path passes
+    no_drop=True (capacity = Tg) because drops would corrupt sampling.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qlinear import maybe_scale, scaled, winit
+from repro.runtime import constrain, current_mesh
+
+Array = jax.Array
+
+GROUP_SIZE = 4096  # tokens per routing group
+CAP_ALIGN = 128    # capacity rounded up to the MXU tile (also makes the
+                   # capacity axis model-shardable when E doesn't divide)
+
+
+def moe_init(key, cfg) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    p = {
+        "router": jax.random.normal(kr, (d, e), jnp.float32) * (d ** -0.5),
+        "Wgate": winit(kg, (e, d, f)),
+        "Wup": winit(ku, (e, d, f)),
+        "Wdown": winit(kd, (e, f, d)),
+    }
+    for n, dout in (("Wgate", f), ("Wup", f), ("Wdown", d)):
+        maybe_scale(p, n, cfg.quant, dout, jnp.float32)
+    return p
+
+
+def capacity(n_tokens: int, cfg, align: int = 1) -> int:
+    c = int(math.ceil(cfg.topk * n_tokens / cfg.n_experts * cfg.capacity_factor))
+    c = max(c, cfg.topk)  # at least topk slots so tiny tests route
+    return (c + align - 1) // align * align
+
+
+def route(logits: Array, cfg, cap: int) -> Tuple[Array, Array, Array]:
+    """logits: (T, E) fp32 -> (dispatch (T, E, C), combine (T, E, C), aux)."""
+    T, E = logits.shape
+    gates, idx = jax.lax.top_k(logits, cfg.topk)           # (T, k)
+    gates = jax.nn.softmax(gates, axis=-1)                  # normalize over k
+
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)      # (T, k, E)
+
+    # queue position per (token, k): cumsum over tokens, k-major priority
+    oh_kt = jnp.swapaxes(onehot, 0, 1).reshape(cfg.topk * T, E)
+    pos_kt = jnp.cumsum(oh_kt, axis=0) - oh_kt
+    pos = jnp.swapaxes(pos_kt.reshape(cfg.topk, T, E), 0, 1)  # (T, k, E)
+    keep = (pos < cap) & (onehot > 0)
+
+    slot = jax.nn.one_hot(jnp.sum(pos * onehot, axis=-1).astype(jnp.int32),
+                          cap, dtype=jnp.float32)           # (T, k, C)
+    disp = jnp.einsum("tke,tkc->tec", onehot * keep, slot)
+    comb = jnp.einsum("tke,tkc->tec", onehot * keep * gates[..., None], slot)
+
+    probs = jax.nn.softmax(logits, axis=-1)
+    frac_tokens = jnp.mean(onehot[:, 0, :], axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+    return disp, comb, aux
+
+
+def moe_apply(p: dict, x: Array, cfg, *, no_drop: bool = False,
+              group_size: int = GROUP_SIZE) -> Tuple[Array, Array]:
+    """x: (B, S, d) -> (y, aux_loss).  SwiGLU experts, grouped routing."""
+    B, S, d = x.shape
+    T = B * S
+    Tg = min(group_size, T)
+    if T % Tg:
+        Tg = T  # odd tiny shapes: single group
+    G = T // Tg
+    xt = x.reshape(G, Tg, d)
+    xt = constrain(xt, ("pod", "data"), None, None)
+    align = CAP_ALIGN if T >= CAP_ALIGN * cfg.n_experts else 1
+    cap = Tg if no_drop else capacity(Tg, cfg, align)
+
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32), p["router"])
+    disp, comb, aux = jax.vmap(lambda l: route(l, cfg, cap))(logits)
+    aux = jnp.mean(aux)
+    disp = disp.astype(x.dtype)
+    comb = comb.astype(x.dtype)
+
+    # Shard the expert axis over 'model' when it divides; otherwise shard the
+    # CAPACITY axis (mixtral: 8 experts on 16-way TP).  Without the fallback
+    # the dispatch/combine einsums replicate across the model axis — measured
+    # 7.6x flop inflation on mixtral train (EXPERIMENTS.md §Perf).
+    mesh = current_mesh()
+    m = mesh.shape.get("model", 1) if mesh is not None else 1
+    if m > 1 and cfg.n_experts % m == 0:
+        espec = ("model", None)
+    else:
+        espec = (None, "model")
+
+    # dispatch: (G, E, C, d) — groups sharded over data
+    xe = jnp.einsum("gtd,gtec->gecd", xt, disp)
+    xe = constrain(xe, ("pod", "data"), *espec, None)
+
+    g = jnp.einsum("gecd,edf->gecf", xe, p["Wgate"])
+    u = jnp.einsum("gecd,edf->gecf", xe, p["Wup"])
+    g = scaled(g, p, "Wgate", cfg.quant)
+    u = scaled(u, p, "Wup", cfg.quant)
+    h = jax.nn.silu(g) * u
+    h = constrain(h, ("pod", "data"), *espec, None)
+    ye = scaled(jnp.einsum("gecf,efd->gecd", h, p["Wdown"]), p, "Wdown", cfg.quant)
+    ye = constrain(ye, ("pod", "data"), *espec, None)
+
+    y = jnp.einsum("gecd,gtec->gtd", ye, comb)
+    return y.reshape(B, S, d), aux.astype(jnp.float32)

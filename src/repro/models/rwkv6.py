@@ -1,0 +1,212 @@
+"""RWKV-6 "Finch" mixer — linear attention with data-dependent per-channel
+decay (arXiv:2404.05892), chunked for TPU.
+
+The WKV6 recurrence per head (head size N):
+
+    y_t = r_t . (S_{t-1} + diag(u) k_t^T v_t)
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          w_t in (0,1), data-dependent
+
+is evaluated chunk-wise: within a chunk of Q tokens it becomes a causally
+masked (Q x Q) matmul against cumulative log-decays (all exp arguments are
+<= 0, so no overflow), across chunks a `lax.scan` carries the (H, N, N)
+state — same MXU-friendly decomposition as Mamba2's SSD.
+
+Quantizable 'W*' leaves: Wr, Wk, Wv, Wg, Wo (time mix) and Wck, Wcv, Wcr
+(channel mix).  The decay/mix LoRAs (rank 32/64) and u-bonus are O(d) fp —
+the paper's own biases/BN-params-stay-fp split.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qlinear import maybe_scale, scaled, winit
+from repro.runtime import constrain
+
+Array = jax.Array
+
+LORA_R = 32
+
+
+class RWKVState(NamedTuple):
+    S: Array         # (B, H, N, N) wkv state
+    tm_shift: Array  # (B, d) last token seen by time-mix
+    cm_shift: Array  # (B, d) last token seen by channel-mix
+    pos: Array
+
+
+def rwkv6_init(key, cfg) -> dict:
+    d = cfg.d_model
+    N = cfg.hd
+    H = d // N
+    ks = jax.random.split(key, 12)
+    p = {
+        # time mix
+        "Wr": winit(ks[0], (d, d)), "Wk": winit(ks[1], (d, d)),
+        "Wv": winit(ks[2], (d, d)), "Wg": winit(ks[3], (d, d)),
+        "Wo": winit(ks[4], (d, d)),
+        "mu_x": jnp.full((5, d), 0.5),       # r,k,v,w,g shift-mix coefficients
+        "lora_A": jax.random.normal(ks[5], (d, LORA_R * 5)) * 0.01,
+        "lora_B": jnp.zeros((5, LORA_R, d)),
+        "w0": jnp.linspace(-6.0, -1.0, d),   # decay bias (log-log space)
+        "wA": jax.random.normal(ks[6], (d, 2 * LORA_R)) * 0.01,
+        "wB": jnp.zeros((2 * LORA_R, d)),
+        "u": jnp.zeros((H, N)),              # bonus
+        "ln_x": jnp.ones((d,)),              # per-head group-norm scale
+        # channel mix
+        "Wck": winit(ks[7], (d, cfg.d_ff)),
+        "Wcv": winit(ks[8], (cfg.d_ff, d)),
+        "Wcr": winit(ks[9], (d, d)),
+        "mu_ck": jnp.full((d,), 0.5), "mu_cr": jnp.full((d,), 0.5),
+    }
+    for n, dout in (("Wr", d), ("Wk", d), ("Wv", d), ("Wg", d), ("Wo", d),
+                    ("Wck", cfg.d_ff), ("Wcv", d), ("Wcr", d)):
+        maybe_scale(p, n, cfg.quant, dout, jnp.float32)
+    return p
+
+
+def wkv6_chunked(r: Array, k: Array, v: Array, logw: Array, u: Array,
+                 chunk: int, S0: Optional[Array] = None) -> Tuple[Array, Array]:
+    """r,k,v: (B, T, H, N); logw: (B, T, H, N) (<=0); u: (H, N).
+    Returns (y (B,T,H,N), S_final (B,H,N,N))."""
+    Bsz, T, H, N = r.shape
+    Q = min(chunk, T)
+    T0 = T
+    if T % Q:
+        # zero-pad to a chunk multiple: k=v=0 adds nothing to the state and
+        # logw=0 (decay 1) leaves it untouched, so the final state is exact.
+        pad = Q - T % Q
+        z = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, logw = z(r), z(k), z(v), z(logw)
+        T = T + pad
+    nc = T // Q
+    rs = lambda t: t.reshape(Bsz, nc, Q, H, N)
+    r, k, v, logw = rs(r), rs(k), rs(v), rs(logw)
+
+    L = jnp.cumsum(logw, axis=2)            # inclusive cumulative log decay
+    Lm1 = L - logw                          # exclusive (L_{i-1}); row 0 -> 0
+    Lend = L[:, :, -1]                      # (B, nc, H, N)
+
+    # intra-chunk, strictly causal: att[i,j] = (r_i * exp(Lm1_i - L_j)) . k_j
+    ri = r * jnp.exp(Lm1)                   # decayed queries
+    kj = k * jnp.exp(-L)                    # inverse-decayed keys (<= factor 1 net)
+    att = jnp.einsum("bcihn,bcjhn->bchij", ri, kj)
+    idx = jnp.arange(Q)
+    att = jnp.where((idx[:, None] > idx[None, :])[None, None, None], att, 0.0)
+    # diagonal bonus term: (r_i * u) . k_i
+    diag = jnp.einsum("bcihn,hn,bcihn->bchi", r, u, k)
+    y = jnp.einsum("bchij,bcjhn->bcihn", att, v)
+    y = y + jnp.einsum("bchi,bcihn->bcihn", diag, v)
+
+    # chunk state increments: sum_j diag(exp(Lend - L_j)) k_j^T v_j.
+    # The recurrent state is ALWAYS fp32 (compounded decays drift in bf16).
+    kdec = k * jnp.exp(Lend[:, :, None] - L)
+    inc = jnp.einsum("bcjhn,bcjhm->bchnm", kdec, v).astype(jnp.float32)
+
+    if S0 is None:
+        S0 = jnp.zeros((Bsz, H, N, N), jnp.float32)
+    S0 = S0.astype(jnp.float32)
+
+    def step(S, inp):
+        inc_c, dec_c = inp                  # (B,H,N,N), (B,H,N)
+        S_in = S
+        S = S * jnp.exp(dec_c)[..., None] + inc_c
+        return S, S_in
+
+    ST, S_in = jax.lax.scan(step, S0,
+                            (jnp.moveaxis(inc, 1, 0), jnp.moveaxis(Lend, 1, 0)))
+    S_in = jnp.moveaxis(S_in, 0, 1)         # (B, nc, H, N, N)
+
+    y = y + jnp.einsum("bcihn,bchnm->bcihm", ri, S_in)
+    return y.reshape(Bsz, T, H, N)[:, :T0], ST
+
+
+def wkv6_step(r, k, v, logw, u, S):
+    """Single token: r,k,v,logw (B,H,N); S (B,H,N,N) fp32 -> (y, S')."""
+    S = S.astype(jnp.float32)
+    kv = jnp.einsum("bhn,bhm->bhnm", k, v).astype(jnp.float32)
+    y = jnp.einsum("bhn,bhnm->bhm", r.astype(jnp.float32),
+                   S + u.astype(jnp.float32)[None, :, :, None] * kv)
+    S = S * jnp.exp(logw).astype(jnp.float32)[..., None] + kv
+    return y, S
+
+
+def _group_norm(x: Array, scale: Array, H: int) -> Array:
+    """Per-head LayerNorm over the head dim (rwkv's ln_x)."""
+    B, T, d = x.shape
+    xh = x.reshape(B, T, H, d // H).astype(jnp.float32)
+    mu = jnp.mean(xh, axis=-1, keepdims=True)
+    var = jnp.var(xh, axis=-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + 1e-5)
+    return (xh.reshape(B, T, d) * scale).astype(x.dtype)
+
+
+def rwkv6_time_mix(p: dict, x: Array, cfg, *, state: Optional[RWKVState] = None,
+                   decode: bool = False):
+    B, T, d = x.shape
+    N = cfg.hd
+    H = d // N
+
+    prev = state.tm_shift if state is not None else jnp.zeros((B, d), x.dtype)
+    xprev = jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+    sx = xprev - x
+
+    # data-dependent mixing (Finch): 5 deltas from a shared LoRA
+    xxx = x + sx * p["mu_x"][0]  # use mu_r as the probe mix (cheap, faithful shape)
+    lora = jnp.tanh(xxx @ p["lora_A"].astype(x.dtype)).reshape(B, T, 5, LORA_R)
+    delta = jnp.einsum("btfr,frd->btfd", lora, p["lora_B"].astype(x.dtype))
+    mix = p["mu_x"].astype(x.dtype)[None, None] + delta      # (B, T, 5, d)
+    xr, xk, xv, xw, xg = [(x + sx * mix[:, :, i]).astype(x.dtype)
+                          for i in range(5)]
+
+    r = scaled(xr @ p["Wr"], p, "Wr", cfg.quant).reshape(B, T, H, N)
+    k = scaled(xk @ p["Wk"], p, "Wk", cfg.quant).reshape(B, T, H, N)
+    v = scaled(xv @ p["Wv"], p, "Wv", cfg.quant).reshape(B, T, H, N)
+    g = jax.nn.silu(scaled(xg @ p["Wg"], p, "Wg", cfg.quant))
+
+    # data-dependent decay: w = exp(-exp(w0 + lora_w(xw))), logw <= 0 (fp32)
+    ww = p["w0"] + (jnp.tanh(xw @ p["wA"].astype(x.dtype))
+                    @ p["wB"].astype(x.dtype)).astype(jnp.float32)
+    logw = -jnp.exp(jnp.clip(ww, -10.0, 5.0)).reshape(B, T, H, N)
+
+    r = constrain(r, ("pod", "data"), None, "model", None)
+    k = constrain(k, ("pod", "data"), None, "model", None)
+    v = constrain(v, ("pod", "data"), None, "model", None)
+
+    S0 = state.S if state is not None else None
+    if decode:
+        S0 = S0 if S0 is not None else jnp.zeros((B, H, N, N), x.dtype)
+        y1, ST = wkv6_step(r[:, 0], k[:, 0], v[:, 0], logw[:, 0], p["u"], S0)
+        y = y1[:, None]
+    else:
+        y, ST = wkv6_chunked(r, k, v, logw, p["u"], cfg.ssm_chunk, S0)
+
+    y = _group_norm(y.reshape(B, T, d), p["ln_x"], H) * g
+    out = scaled(y @ p["Wo"], p, "Wo", cfg.quant)
+    return out, ST, x[:, -1]
+
+
+def rwkv6_channel_mix(p: dict, x: Array, cfg, *, prev: Optional[Array] = None):
+    B, T, d = x.shape
+    if prev is None:
+        prev = jnp.zeros((B, d), x.dtype)
+    xprev = jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+    sx = xprev - x
+    xk = x + sx * p["mu_ck"].astype(x.dtype)
+    xr = x + sx * p["mu_cr"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(scaled(xk @ p["Wck"], p, "Wck", cfg.quant)))
+    k = constrain(k, ("pod", "data"), None, "model")
+    kv = scaled(k @ p["Wcv"], p, "Wcv", cfg.quant)
+    return jax.nn.sigmoid(scaled(xr @ p["Wcr"], p, "Wcr", cfg.quant)) * kv, x[:, -1]
+
+
+def rwkv_state_init(cfg, batch: int, dtype=jnp.float32) -> RWKVState:
+    d = cfg.d_model
+    N = cfg.hd
+    H = d // N
+    return RWKVState(S=jnp.zeros((batch, H, N, N), jnp.float32),  # fp32 core
+                     tm_shift=jnp.zeros((batch, d), dtype),
+                     cm_shift=jnp.zeros((batch, d), dtype),
+                     pos=jnp.zeros((), jnp.int32))

@@ -1,0 +1,523 @@
+"""Pattern-driven model covering the whole assigned pool.
+
+One code path builds dense (llama3/qwen3/gemma3), MoE (mixtral/qwen3-moe),
+SSM (rwkv6), hybrid (zamba2: mamba2 + shared attention block), enc-dec audio
+(whisper backbone) and VLM (llama-3.2-vision: interleaved cross-attn) models
+from a `ModelConfig`.
+
+HLO-size discipline (critical for the 512-device dry-run): layers are grouped
+by the repeating `block_pattern`; parameters of repeat r, pattern position i
+are STACKED over r and the model runs as `lax.scan` over repeats with the
+pattern unrolled inside the body.  A 100-layer model lowers to ~5 layer bodies
++ a scan, not 100 inlined layers.  KV caches / SSM states are stacked the same
+way and streamed through the scan as xs/ys.
+
+The paper's technique enters exactly once per step: `quantize_tree` maps every
+'W*' leaf (stacked or not) through the stochastic binary/ternary quantizer
+with straight-through gradients (core/qlinear.py).  Everything else here is
+quantization-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qlinear import quantize_tree, winit
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models import moe as MOE
+from repro.models import rwkv6 as R
+from repro.runtime import constrain
+from repro.serve.kvcache import (AttnCache, CrossCache, cache_init,
+                                 cache_positions, cache_update)
+
+Array = jax.Array
+
+ATTN_KINDS = ("full", "global", "self", "local", "enc")
+DECODE_MARGIN = 128  # extra cache slots beyond the spec'd context length
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _remat_policy(cfg):
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return None
+
+
+# ---------------------------------------------------------------------------
+# pattern expansion
+# ---------------------------------------------------------------------------
+
+
+def expand_pattern(cfg) -> Tuple[Tuple[str, ...], int, Tuple[str, ...]]:
+    """-> (pattern, repeats, tail_kinds).  n_layers counts *pattern* layers;
+    for hybrids the shared-attn applications are extra (zamba2 style)."""
+    if cfg.family == "hybrid" and cfg.attn_every > 0:
+        pat = ("mamba",) * cfg.attn_every + ("shared",)
+        rep = cfg.n_layers // cfg.attn_every
+        tail = ("mamba",) * (cfg.n_layers % cfg.attn_every)
+        return pat, rep, tail
+    pat = cfg.block_pattern
+    rep = cfg.n_layers // len(pat)
+    tail = pat[: cfg.n_layers % len(pat)]
+    return pat, rep, tail
+
+
+def owns_params(kind: str) -> bool:
+    return kind != "shared"
+
+
+# ---------------------------------------------------------------------------
+# per-block init
+# ---------------------------------------------------------------------------
+
+
+def block_init(key, cfg, kind: str) -> dict:
+    d = cfg.d_model
+    if kind == "mamba":
+        k1, k2 = jax.random.split(key)
+        return {"norm": jnp.zeros((d,)), "mixer": M.mamba2_init(k2, cfg)}
+    if kind == "rwkv":
+        k1, = jax.random.split(key, 1)
+        return {"ln1": jnp.zeros((d,)), "ln2": jnp.zeros((d,)),
+                "mix": R.rwkv6_init(k1, cfg)}
+    ka, km = jax.random.split(key)
+    p: dict = {"norm1": jnp.zeros((d,)), "norm2": jnp.zeros((d,))}
+    if kind == "cross":
+        p["attn"] = L.attn_init(ka, cfg, cross=True, kv_d=d)
+    elif kind == "selfcross":
+        kx, ka = jax.random.split(ka)
+        p["attn"] = L.attn_init(ka, cfg)
+        p["normc"] = jnp.zeros((d,))
+        p["xattn"] = L.attn_init(kx, cfg, cross=True, kv_d=d)
+    else:
+        p["attn"] = L.attn_init(ka, cfg)
+    if cfg.n_experts > 0 and kind not in ("enc",):
+        p["moe"] = MOE.moe_init(km, cfg)
+    else:
+        p["mlp"] = L.mlp_init(km, cfg, kind="gelu" if cfg.family == "audio" else None)
+    return p
+
+
+def _stacked_init(key, cfg, kind: str, n: int) -> dict:
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: block_init(k, cfg, kind))(keys)
+
+
+def model_init(key, cfg) -> dict:
+    d, Vp = cfg.d_model, cfg.padded_vocab
+    pat, rep, tail = expand_pattern(cfg)
+    keys = jax.random.split(key, len(pat) + len(tail) + 8)
+    ki = iter(range(len(keys)))
+
+    params: dict = {
+        "embed": jax.random.normal(keys[next(ki)], (Vp, d)) * (d ** -0.5),
+        "final_norm": jnp.zeros((d,)),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = winit(keys[next(ki)], (d, Vp))
+    params["stack"] = tuple(
+        _stacked_init(keys[next(ki)], cfg, k, rep) if owns_params(k) else {}
+        for k in pat
+    )
+    params["tail"] = tuple(
+        block_init(keys[next(ki)], cfg, k) if owns_params(k) else {} for k in tail
+    )
+    if cfg.family == "hybrid":
+        params["shared"] = block_init(keys[next(ki)], cfg, "full")
+    if cfg.family == "audio":
+        ek = jax.random.split(keys[next(ki)], cfg.n_enc_layers + 1)
+        params["enc"] = {
+            "stack": _stacked_init(ek[0], cfg, "enc", cfg.n_enc_layers),
+            "final_norm": jnp.zeros((d,)),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block apply — one function per (kind, cached?) path
+# ---------------------------------------------------------------------------
+
+
+def _mlp_or_moe(p: dict, x: Array, cfg, *, no_drop: bool = False) -> Tuple[Array, Array]:
+    if "moe" in p:
+        y, aux = MOE.moe_apply(p["moe"], x, cfg, no_drop=no_drop)
+        return y, aux
+    return L.mlp_apply(p["mlp"], x, cfg), jnp.zeros((), jnp.float32)
+
+
+def _attn_full(p, x, cfg, kind, positions, xsrc):
+    """Training/uncached attention block."""
+    if cfg.parallel_block and kind in ("full", "global", "self", "local"):
+        h = L.rms_norm(x, p["norm1"])
+        o = L.attn_apply(p["attn"], h, cfg, kind=kind, positions=positions)
+        y, aux = _mlp_or_moe(p, h, cfg)
+        return x + o + y, aux
+    h = L.rms_norm(x, p["norm1"])
+    if kind == "cross":
+        o = L.attn_apply(p["attn"], h, cfg, kind="cross", kv_src=xsrc)
+    elif kind == "selfcross":
+        o = L.attn_apply(p["attn"], h, cfg, kind="full", positions=positions)
+        x = x + o
+        hc = L.rms_norm(x, p["normc"])
+        o = L.attn_apply(p["xattn"], hc, cfg, kind="cross", kv_src=xsrc)
+    else:
+        o = L.attn_apply(p["attn"], h, cfg, kind=kind, positions=positions,
+                         causal=False if kind == "enc" else None)
+    x = x + o
+    h = L.rms_norm(x, p["norm2"])
+    y, aux = _mlp_or_moe(p, h, cfg)
+    return x + y, aux
+
+
+def _self_attn_cached(p_attn, h, cfg, cache: AttnCache, *, window: int):
+    """h: (B, S, d) new tokens; attends over cache+new.  Returns (o, cache)."""
+    q = L.attn_q(p_attn, h, cfg)
+    k_new, v_new = L.attn_kv(p_attn, h, cfg)
+    S = h.shape[1]
+    positions = cache.pos + jnp.arange(S, dtype=jnp.int32)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k_new = L.rope(k_new, positions, cfg.rope_theta)
+    cache = cache_update(cache, k_new, v_new)
+    kv_pos = cache_positions(cache)
+    # Match q's sharding to the cache policy: heads over 'model' only when
+    # the KV heads themselves are head-sharded; with a LENGTH-sharded cache
+    # (GQA kv-heads < TP degree) q stays replicated over 'model' so the
+    # attention runs where the cache lives (partial logits + small gather)
+    # instead of resharding gigabytes of cache every step.
+    from repro.serve.kvcache import kv_pspec
+    spec = kv_pspec(cache.k.shape[0], cache.k.shape[1], cache.k.shape[2])
+    if len(spec) > 2 and spec[2] == "model":
+        q = constrain(q, ("pod", "data"), None, "model", None)
+    o = L.attention(q, cache.k, cache.v, causal=True, window=window,
+                    q_offset=cache.pos - S, kv_pos=kv_pos,
+                    chunk=cfg.attn_chunk, softcap=cfg.attn_softcap)
+    return o, cache
+
+
+def _attn_cached(p, x, cfg, kind, cache, xcache: Optional[CrossCache]):
+    """Prefill/decode attention block; returns (x, new_cache, new_xcache)."""
+    window = cfg.window if (kind == "local" or cfg.swa_all) else 0
+    if cfg.parallel_block and kind in ("full", "global", "self", "local",
+                                       "shared"):
+        h = L.rms_norm(x, p["norm1"])
+        o, cache = _self_attn_cached(p["attn"], h, cfg, cache, window=window)
+        o = L.attn_out(p["attn"], o, cfg)
+        y, aux = _mlp_or_moe(p, h, cfg, no_drop=x.shape[1] == 1)
+        return x + o + y, cache, xcache, aux
+    h = L.rms_norm(x, p["norm1"])
+    if kind == "cross":
+        q = L.attn_q(p["attn"], h, cfg)
+        o = L.attention(q, xcache.k, xcache.v, causal=False)
+        x = x + L.attn_out(p["attn"], o, cfg, cross=True)
+    elif kind == "selfcross":
+        o, cache = _self_attn_cached(p["attn"], h, cfg, cache, window=0)
+        x = x + L.attn_out(p["attn"], o, cfg)
+        hc = L.rms_norm(x, p["normc"])
+        q = L.attn_q(p["xattn"], hc, cfg)
+        o = L.attention(q, xcache.k, xcache.v, causal=False)
+        x = x + L.attn_out(p["xattn"], o, cfg, cross=True)
+    else:
+        o, cache = _self_attn_cached(p["attn"], h, cfg, cache, window=window)
+        x = x + L.attn_out(p["attn"], o, cfg)
+    h = L.rms_norm(x, p["norm2"])
+    y, aux = _mlp_or_moe(p, h, cfg, no_drop=x.shape[1] == 1)
+    return x + y, cache, xcache, aux
+
+
+def _mamba_block(p, x, cfg, state, decode):
+    h = L.rms_norm(x, p["norm"])
+    y, new_state = M.mamba2_apply(p["mixer"], h, cfg, state=state, decode=decode)
+    return x + y.astype(x.dtype), new_state
+
+
+def _rwkv_block(p, x, cfg, state: Optional[R.RWKVState], decode):
+    h = L.rms_norm(x, p["ln1"])
+    y, S, tm_last = R.rwkv6_time_mix(p["mix"], h, cfg, state=state, decode=decode)
+    x = x + y.astype(x.dtype)
+    h = L.rms_norm(x, p["ln2"])
+    y, cm_last = R.rwkv6_channel_mix(
+        p["mix"], h, cfg, prev=state.cm_shift if state is not None else None)
+    x = x + y.astype(x.dtype)
+    new_state = None
+    if state is not None:
+        new_state = R.RWKVState(S=S, tm_shift=tm_last, cm_shift=cm_last,
+                                pos=state.pos + h.shape[1])
+    return x, new_state
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+# ---------------------------------------------------------------------------
+
+
+def _kind_cache(cfg, kind: str, batch: int, cap: int, src_len: int, dtype):
+    """Cache pytree for one layer of `kind` (python structure, zero arrays)."""
+    Hkv, hd = cfg.n_kv, cfg.hd
+    if kind in ("full", "global", "self", "shared"):
+        c = cap if not cfg.swa_all else min(cfg.window + DECODE_MARGIN, cap)
+        return {"attn": cache_init(batch, c, Hkv, hd, dtype, ring=cfg.swa_all)}
+    if kind == "local":
+        w = min(cfg.window + DECODE_MARGIN, cap)
+        return {"attn": cache_init(batch, w, Hkv, hd, dtype, ring=True)}
+    if kind == "cross":
+        return {"cross": CrossCache(k=jnp.zeros((batch, src_len, Hkv, hd), dtype),
+                                    v=jnp.zeros((batch, src_len, Hkv, hd), dtype))}
+    if kind == "selfcross":
+        return {"attn": cache_init(batch, cap, Hkv, hd, dtype),
+                "cross": CrossCache(k=jnp.zeros((batch, src_len, Hkv, hd), dtype),
+                                    v=jnp.zeros((batch, src_len, Hkv, hd), dtype))}
+    if kind == "mamba":
+        return {"ssm": M.ssm_state_init(cfg, batch, dtype)}
+    if kind == "rwkv":
+        return {"rwkv": R.rwkv_state_init(cfg, batch, dtype)}
+    raise ValueError(kind)
+
+
+def init_caches(cfg, batch: int, context: int, *, src_len: int = 0,
+                dtype=None) -> dict:
+    """Stacked cache pytree matching the scan structure."""
+    dtype = dtype or _dt(cfg)
+    cap = context + DECODE_MARGIN
+    pat, rep, tail = expand_pattern(cfg)
+
+    def stack(kind):
+        one = _kind_cache(cfg, kind, batch, cap, src_len, dtype)
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (rep,) + a.shape), one)
+
+    return {
+        "stack": tuple(stack(k) for k in pat),
+        "tail": tuple(_kind_cache(cfg, k, batch, cap, src_len, dtype) for k in tail),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward (training / eval — no caches)
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, tokens: Array, cfg) -> Array:
+    x = jnp.take(params["embed"], tokens, axis=0).astype(_dt(cfg))
+    return constrain(x, ("pod", "data"), None, None)
+
+
+def _head(params, x: Array, cfg) -> Array:
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = (x @ w.astype(x.dtype)).astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab:
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab
+        logits = jnp.where(pad_mask, logits, -1e30)
+    return constrain(logits, ("pod", "data"), None, "model")
+
+
+def _run_encoder(params, frames: Array, cfg) -> Array:
+    """Whisper-style encoder over precomputed frame embeddings (stub frontend)."""
+    x = frames.astype(_dt(cfg))
+    x = x + L.sinusoidal_positions(frames.shape[1], cfg.d_model).astype(x.dtype)
+    positions = jnp.arange(frames.shape[1], dtype=jnp.int32)
+
+    def body(x, p_slice):
+        y, _ = _attn_full(p_slice, x, cfg, "enc", positions, None)
+        return y, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False, policy=_remat_policy(cfg))
+    if cfg.n_enc_layers > 0 and cfg.unroll:
+        for r in range(cfg.n_enc_layers):
+            x, _ = body(x, jax.tree.map(lambda l: l[r], params["enc"]["stack"]))
+    elif cfg.n_enc_layers > 0:
+        x, _ = jax.lax.scan(body, x, params["enc"]["stack"])
+    return L.rms_norm(x, params["enc"]["final_norm"])
+
+
+def forward(params, tokens: Array, cfg, *, training: bool = False,
+            rng: Optional[Array] = None, img: Optional[Array] = None,
+            enc_frames: Optional[Array] = None,
+            last_only: bool = False) -> Tuple[Array, Array]:
+    """Full-sequence forward.  Returns (logits, moe_aux_loss).
+
+    tokens: (B, S) int32.  img: (B, N_img, d) VLM patch embeddings (stub).
+    enc_frames: (B, S_audio, d) whisper frame embeddings (stub).
+    """
+    spec = cfg.quant if training else dataclasses.replace(
+        cfg.quant, stochastic=False)
+    qparams = quantize_tree(params, spec, rng, compute_dtype=_dt(cfg))
+
+    xsrc = None
+    if cfg.family == "audio":
+        xsrc = _run_encoder(qparams, enc_frames, cfg)
+    elif cfg.family == "vlm":
+        xsrc = img.astype(_dt(cfg))
+
+    x = _embed(qparams, tokens, cfg)
+    S = tokens.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    pat, rep, tail = expand_pattern(cfg)
+
+    def apply_kind(p, x, kind):
+        if kind == "mamba":
+            y, _ = _mamba_block(p, x, cfg, None, False)
+            return y, jnp.zeros((), jnp.float32)
+        if kind == "rwkv":
+            y, _ = _rwkv_block(p, x, cfg, None, False)
+            return y, jnp.zeros((), jnp.float32)
+        if kind == "shared":
+            return _attn_full(qparams["shared"], x, cfg, "full", positions, xsrc)
+        return _attn_full(p, x, cfg, kind, positions, xsrc)
+
+    def body(carry, p_slices):
+        x, aux = carry
+        for kind, p in zip(pat, p_slices):
+            x, a = apply_kind(p, x, kind)
+            aux = aux + a
+        x = constrain(x, ("pod", "data"), None, None)
+        return (x, aux), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False, policy=_remat_policy(cfg))
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if rep > 0 and cfg.unroll:
+        carry = (x, aux0)
+        for r in range(rep):
+            carry, _ = body(carry, jax.tree.map(lambda l: l[r], qparams["stack"]))
+        x, aux = carry
+    elif rep > 0:
+        (x, aux), _ = jax.lax.scan(body, (x, aux0), qparams["stack"])
+    else:
+        aux = aux0
+    for kind, p in zip(tail, qparams["tail"]):
+        x, a = apply_kind(p, x, kind)
+        aux = aux + a
+
+    x = L.rms_norm(x, qparams["final_norm"])
+    if last_only:
+        x = x[:, -1:]
+    return _head(qparams, x, cfg), aux
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode share one cached-step implementation
+# ---------------------------------------------------------------------------
+
+
+def _step_cached(qparams, x, caches, cfg, *, decode: bool,
+                 xsrc: Optional[Array]) -> Tuple[Array, dict, Array]:
+    """Run all layers over new tokens x (B,S,d) against caches."""
+    pat, rep, tail = expand_pattern(cfg)
+
+    def apply_kind(p, x, kind, cache):
+        aux0 = jnp.zeros((), jnp.float32)
+        if kind == "mamba":
+            y, st = _mamba_block(p, x, cfg, cache["ssm"], decode)
+            return y, {"ssm": st}, aux0
+        if kind == "rwkv":
+            y, st = _rwkv_block(p, x, cfg, cache["rwkv"], decode)
+            return y, {"rwkv": st}, aux0
+        pp = qparams["shared"] if kind == "shared" else p
+        kk = "full" if kind == "shared" else kind
+        xc = cache.get("cross")
+        if xc is not None and not decode and xsrc is not None:
+            # prefill: encode the cross source into the cache once
+            name = "xattn" if kk == "selfcross" else "attn"
+            k, v = L.attn_kv(pp[name], xsrc, cfg)
+            xc = CrossCache(k=k, v=v)
+        y, ac, xc, aux = _attn_cached(pp, x, cfg, kk, cache.get("attn"), xc)
+        out = {}
+        if ac is not None:
+            out["attn"] = ac
+        if xc is not None:
+            out["cross"] = xc
+        return y, out, aux
+
+    def body(carry, xs):
+        x, aux = carry
+        p_slices, cache_slices = xs
+        new_caches = []
+        for kind, p, c in zip(pat, p_slices, cache_slices):
+            x, nc, a = apply_kind(p, x, kind, c)
+            new_caches.append(nc)
+            aux = aux + a
+        x = constrain(x, ("pod", "data"), None, None)
+        return (x, aux), tuple(new_caches)
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if rep > 0 and cfg.unroll:
+        carry = (x, aux0)
+        outs = []
+        for r in range(rep):
+            sl = lambda t: jax.tree.map(lambda l: l[r], t)
+            carry, nc = body(carry, (sl(qparams["stack"]), sl(caches["stack"])))
+            outs.append(nc)
+        (x, aux) = carry
+        new_stack = jax.tree.map(lambda *ls: jnp.stack(ls), *outs) if outs else \
+            caches["stack"]
+    elif rep > 0:
+        (x, aux), new_stack = jax.lax.scan(
+            body, (x, aux0), (qparams["stack"], caches["stack"]))
+    else:
+        aux, new_stack = aux0, caches["stack"]
+    new_tail = []
+    for kind, p, c in zip(tail, qparams["tail"], caches["tail"]):
+        x, nc, a = apply_kind(p, x, kind, c)
+        new_tail.append(nc)
+        aux = aux + a
+    return x, {"stack": new_stack, "tail": tuple(new_tail)}, aux
+
+
+def _serve_quant(params, cfg):
+    spec = dataclasses.replace(cfg.quant, stochastic=False)
+    return quantize_tree(params, spec, None, compute_dtype=_dt(cfg))
+
+
+def prefill(params, tokens: Array, caches: dict, cfg, *,
+            img: Optional[Array] = None,
+            enc_frames: Optional[Array] = None) -> Tuple[Array, dict]:
+    """Process the prompt, fill caches.  Returns (last-token logits, caches)."""
+    qparams = _serve_quant(params, cfg)
+    xsrc = None
+    if cfg.family == "audio":
+        xsrc = _run_encoder(qparams, enc_frames, cfg)
+    elif cfg.family == "vlm":
+        xsrc = img.astype(_dt(cfg))
+    x = _embed(qparams, tokens, cfg)
+    x, caches, _ = _step_cached(qparams, x, caches, cfg, decode=False, xsrc=xsrc)
+    x = L.rms_norm(x[:, -1:], qparams["final_norm"])
+    return _head(qparams, x, cfg)[:, 0], caches
+
+
+def decode_step(params, token: Array, caches: dict, cfg) -> Tuple[Array, dict]:
+    """One decode step.  token: (B,) or (B,1) int32 -> (logits (B, Vp), caches)."""
+    if token.ndim == 1:
+        token = token[:, None]
+    qparams = _serve_quant(params, cfg)
+    x = _embed(qparams, token, cfg)
+    x, caches, _ = _step_cached(qparams, x, caches, cfg, decode=True, xsrc=None)
+    x = L.rms_norm(x, qparams["final_norm"])
+    return _head(qparams, x, cfg)[:, 0], caches
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(params, batch: dict, cfg, *, training: bool = True,
+            rng: Optional[Array] = None, aux_weight: float = 0.01,
+            z_weight: float = 1e-4):
+    """batch: {'tokens': (B,S), 'targets': (B,S), optional 'img'/'enc_frames'}."""
+    logits, aux = forward(params, batch["tokens"], cfg, training=training,
+                          rng=rng, img=batch.get("img"),
+                          enc_frames=batch.get("enc_frames"))
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, batch["targets"][..., None], axis=-1)[..., 0]
+    nll = jnp.mean(logz - tgt)
+    loss = nll + aux_weight * aux + z_weight * jnp.mean(jnp.square(logz))
+    return loss, {"nll": nll, "moe_aux": aux}

@@ -1,0 +1,132 @@
+"""KV caches for serving: full, ring-buffer (sliding window), and cross-attn.
+
+Sharding policy (decode-time memory dominates at 32k/500k):
+  * batch axis -> ('pod', 'data')
+  * KV heads   -> 'model' when divisible (GQA archs with >= mesh kv heads)
+  * otherwise the SEQUENCE axis -> 'model' (length-sharded cache; attention
+    over a length-sharded cache costs one small logits all-gather per step,
+    but divides the dominant cache bytes by the TP degree).
+This fallback is what makes e.g. llama3-8b decode_32k (8 kv heads, 16-way
+model axis) fit: 4.3 GB/seq of cache is length-sharded instead of replicated.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.runtime import current_mesh
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+class AttnCache:
+    """k, v: (B, C, Hkv, hd) with capacity C; pos: () int32 tokens written.
+    `ring` (sliding-window buffer) is static pytree aux data, so it stays a
+    python bool under jit/scan."""
+
+    def __init__(self, k: Array, v: Array, pos: Array, ring: bool = False):
+        self.k, self.v, self.pos, self.ring = k, v, pos, ring
+
+    def _replace(self, **kw) -> "AttnCache":
+        d = {"k": self.k, "v": self.v, "pos": self.pos, "ring": self.ring}
+        d.update(kw)
+        return AttnCache(**d)
+
+    def tree_flatten(self):
+        return (self.k, self.v, self.pos), self.ring
+
+    @classmethod
+    def tree_unflatten(cls, ring, children):
+        return cls(*children, ring=ring)
+
+
+class CrossCache(NamedTuple):
+    k: Array      # (B, S_src, Hkv, hd) — fixed after prefill
+    v: Array
+
+
+def kv_pspec(batch: int, cap: int, heads: int) -> P:
+    """Pick the cache PartitionSpec per the policy above."""
+    mesh = current_mesh()
+    if mesh is None:
+        return P()
+    bd = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    m = mesh.shape.get("model", 1)
+    bspec = None
+    prod = 1
+    keep = []
+    for a in bd:
+        if batch % (prod * mesh.shape[a]) == 0:
+            keep.append(a)
+            prod *= mesh.shape[a]
+    bspec = tuple(keep) if keep else None
+    if m > 1 and heads % m == 0:
+        return P(bspec, None, "model", None)
+    if m > 1 and cap % m == 0:
+        return P(bspec, "model", None, None)
+    return P(bspec, None, None, None)
+
+
+def constrain_cache(c: AttnCache) -> AttnCache:
+    mesh = current_mesh()
+    if mesh is None:
+        return c
+    spec = kv_pspec(c.k.shape[0], c.k.shape[1], c.k.shape[2])
+    return c._replace(k=jax.lax.with_sharding_constraint(c.k, spec),
+                      v=jax.lax.with_sharding_constraint(c.v, spec))
+
+
+def cache_init(batch: int, cap: int, heads: int, hd: int, dtype,
+               *, ring: bool = False) -> AttnCache:
+    return AttnCache(
+        k=jnp.zeros((batch, cap, heads, hd), dtype),
+        v=jnp.zeros((batch, cap, heads, hd), dtype),
+        pos=jnp.zeros((), jnp.int32),
+        ring=ring,
+    )
+
+
+def cache_positions(c: AttnCache) -> Array:
+    """Absolute position stored in each slot; -1 marks unwritten/invalid."""
+    cap = c.k.shape[1]
+    slots = jnp.arange(cap, dtype=jnp.int32)
+    if c.ring:
+        # slot s holds the largest a < pos with a % cap == s
+        a = c.pos - 1 - jnp.mod(c.pos - 1 - slots, cap)
+        return jnp.where((a >= 0) & (c.pos > 0), a, -1)
+    return jnp.where(slots < c.pos, slots, -1)
+
+
+def cache_update(c: AttnCache, k_new: Array, v_new: Array) -> AttnCache:
+    """Append S_new tokens (prefill: S_new = S; decode: S_new = 1).
+
+    Non-ring: writes at [pos, pos+S).  Ring: writes each token at its
+    (absolute position % window) slot; assumes S_new <= capacity or the
+    early tokens are overwritten (correct: they'd be out of window anyway).
+    """
+    cap = c.k.shape[1]
+    S = k_new.shape[1]
+    if c.ring and S > 1:
+        # prefill into a ring: keep only the last min(S, cap) tokens
+        take = min(S, cap)
+        kt, vt = k_new[:, -take:], v_new[:, -take:]
+        start0 = c.pos + S - take
+        slots = jnp.mod(start0 + jnp.arange(take), cap)
+        k = c.k.at[:, slots].set(kt)
+        v = c.v.at[:, slots].set(vt)
+    elif c.ring:
+        slot = jnp.mod(c.pos, cap)
+        k = jax.lax.dynamic_update_slice_in_dim(c.k, k_new, slot, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(c.v, v_new, slot, axis=1)
+    else:
+        k = jax.lax.dynamic_update_slice_in_dim(c.k, k_new, c.pos, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(c.v, v_new, c.pos, axis=1)
+    return constrain_cache(AttnCache(k=k, v=v, pos=c.pos + S, ring=c.ring))
+
+
+def cache_bytes(c: AttnCache) -> int:
+    return c.k.size * c.k.dtype.itemsize * 2

@@ -1,0 +1,21 @@
+"""Token samplers for the serving loop."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def sample(logits: Array, key: Array, *, temperature: float = 1.0,
+           top_k: int = 0, vocab: int = 0) -> Array:
+    """logits: (B, V) -> (B,) int32.  temperature<=0 means greedy."""
+    if vocab and logits.shape[-1] > vocab:
+        logits = jnp.where(jnp.arange(logits.shape[-1]) < vocab, logits, -1e30)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k > 0:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits >= kth, logits, -1e30)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,54 @@
+"""Unbiased stochastic ternary gradient compression (TernGrad-style) — a
+beyond-paper extension reusing the paper's own Eq.(5/6) machinery on
+GRADIENTS: each DP replica ternarizes its local gradient before the cross-
+replica reduction, cutting all-reduce bytes ~16x (2-bit codes + one fp scale
+per tensor).
+
+  t = s * Tern(g / s),  s = max|g|  (per tensor)   =>   E[t] = g  (unbiased)
+
+Error feedback (Seide et al.) keeps the quantization residual local and adds
+it to the next step's gradient, which empirically removes the convergence
+penalty.  Used inside `shard_map` (train_step.py) where per-replica gradients
+exist before the psum.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def ternary_compress(g: Array, key: Array) -> Tuple[Array, Array]:
+    """-> (t, scale) with t in {-1,0,+1}*scale and E[t] = g."""
+    scale = jnp.max(jnp.abs(g)) + 1e-12
+    p = jnp.abs(g) / scale
+    u = jax.random.uniform(key, g.shape, jnp.float32)
+    t = jnp.where(u < p, jnp.sign(g), 0.0).astype(g.dtype)
+    return t * scale, scale
+
+
+def compress_tree(grads: Any, key: Array,
+                  residual: Optional[Any] = None) -> Tuple[Any, Any]:
+    """Ternarize every leaf (with error feedback when `residual` given).
+    Returns (compressed_grads, new_residual)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    res_leaves = jax.tree.leaves(residual) if residual is not None else [
+        jnp.zeros_like(l) for l in leaves]
+    keys = jax.random.split(key, len(leaves))
+    out, new_res = [], []
+    for leaf, r, k in zip(leaves, res_leaves, keys):
+        corrected = leaf + r
+        t, _ = ternary_compress(corrected, k)
+        out.append(t)
+        new_res.append(corrected - t)
+    return treedef.unflatten(out), treedef.unflatten(new_res)
+
+
+def compressed_bytes(grads: Any) -> tuple[int, int]:
+    """(fp32 all-reduce bytes, 2-bit-code all-reduce bytes) for reporting."""
+    n = sum(x.size for x in jax.tree.leaves(grads))
+    n_tensors = len(jax.tree.leaves(grads))
+    return 4 * n, (2 * n) // 8 + 4 * n_tensors

@@ -1,0 +1,79 @@
+"""Elastic scaling: recompute the best mesh from surviving devices.
+
+When hosts are evicted (failure / straggler), the controller restarts the job
+on the survivors.  `best_mesh_shape` picks the largest usable (pod, data,
+model) factorization that (a) preserves the model axis when possible —
+parameter shards must still fit — and (b) keeps the global batch divisible so
+optimizer semantics don't change (per-replica batch is rescaled instead).
+Checkpoints are resharding-agnostic (full-tensor leaves on this container's
+single host; per-shard layout carries index metadata on real fleets).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+    per_replica_batch: int
+    dropped_devices: int
+
+
+def _divisors_desc(n: int):
+    return [d for d in range(n, 0, -1) if n % d == 0]
+
+
+def best_mesh_shape(n_devices: int, *, want_model: int, global_batch: int,
+                    pods: int = 1, min_util: float = 0.9) -> MeshPlan:
+    """Largest feasible (pod, data, model) using <= n_devices.
+
+    First pass keeps the global batch EXACTLY divisible (identical optimizer
+    semantics).  If that wastes more than (1 - min_util) of the fleet, a
+    second pass takes the largest mesh and rescales the per-replica batch to
+    the nearest value (global batch changes by < one replica batch — the
+    standard elastic-training compromise, logged by the caller)."""
+    def plan(data, model):
+        used = pods * data * model
+        shape = (pods, data, model) if pods > 1 else (data, model)
+        axes = ("pod", "data", "model") if pods > 1 else ("data", "model")
+        prb = max(1, round(global_batch / (pods * data)))
+        return MeshPlan(shape=shape, axes=axes, per_replica_batch=prb,
+                        dropped_devices=n_devices - used)
+
+    best_exact = None
+    for model in [want_model] + _divisors_desc(want_model)[1:]:
+        data = (n_devices // pods) // model
+        while data > 0:
+            if global_batch % (pods * data) == 0:
+                p = plan(data, model)
+                if best_exact is None or p.dropped_devices < best_exact.dropped_devices:
+                    best_exact = p
+                break
+            data -= 1
+    if best_exact is not None and \
+            best_exact.dropped_devices <= (1 - min_util) * n_devices:
+        return best_exact
+    # utilization-first fallback: largest mesh, batch rescaled
+    for model in [want_model] + _divisors_desc(want_model)[1:]:
+        data = (n_devices // pods) // model
+        if data > 0:
+            return plan(data, model)
+    if best_exact is not None:
+        return best_exact
+    raise ValueError(f"no feasible mesh for {n_devices} devices, "
+                     f"batch {global_batch}")
+
+
+def make_mesh_from_plan(plan: MeshPlan, devices=None) -> jax.sharding.Mesh:
+    devices = devices if devices is not None else jax.devices()
+    n = 1
+    for s in plan.shape:
+        n *= s
+    import numpy as np
+    return jax.sharding.Mesh(
+        np.asarray(devices[:n]).reshape(plan.shape), plan.axes)

@@ -1,0 +1,95 @@
+"""Fault tolerance: preemption handling + straggler detection.
+
+PreemptionHandler — converts SIGTERM/SIGINT into a cooperative "checkpoint
+now and exit 43" request; the launcher (launch/train.py) treats exit code 43
+as "restart me" (the standard TPU-preemption contract).
+
+StragglerMonitor — EWMA of per-host step time vs the fleet median; hosts
+persistently above `ratio` are flagged so the controller can evict them and
+trigger an elastic reshape (train/elastic.py).  On a real multi-host fleet
+the per-host timings arrive through a tiny all-gather each N steps; the
+aggregation logic here is host-side and identical.
+"""
+from __future__ import annotations
+
+import signal
+import threading
+import time
+from typing import Dict, List, Optional
+
+RESTART_EXIT_CODE = 43
+
+
+class PreemptionHandler:
+    def __init__(self, signals=(signal.SIGTERM, signal.SIGINT)):
+        self._flag = threading.Event()
+        self._orig = {}
+        for s in signals:
+            try:
+                self._orig[s] = signal.signal(s, self._handler)
+            except ValueError:  # not main thread (tests)
+                pass
+
+    def _handler(self, signum, frame):
+        self._flag.set()
+
+    @property
+    def preempted(self) -> bool:
+        return self._flag.is_set()
+
+    def simulate(self):  # for tests / chaos drills
+        self._flag.set()
+
+    def restore(self):
+        for s, h in self._orig.items():
+            signal.signal(s, h)
+
+
+class StragglerMonitor:
+    """Track per-host EWMA step times; flag hosts slower than ratio x median."""
+
+    def __init__(self, n_hosts: int, alpha: float = 0.1, ratio: float = 1.5,
+                 patience: int = 3):
+        self.ewma: Dict[int, float] = {}
+        self.strikes: Dict[int, int] = {h: 0 for h in range(n_hosts)}
+        self.alpha = alpha
+        self.ratio = ratio
+        self.patience = patience
+
+    def record(self, host: int, dt: float):
+        prev = self.ewma.get(host)
+        self.ewma[host] = dt if prev is None else (
+            (1 - self.alpha) * prev + self.alpha * dt)
+
+    def record_all(self, dts: Dict[int, float]) -> List[int]:
+        for h, dt in dts.items():
+            self.record(h, dt)
+        return self.flagged()
+
+    def flagged(self) -> List[int]:
+        if len(self.ewma) < 2:
+            return []
+        vals = sorted(self.ewma.values())
+        median = vals[len(vals) // 2]
+        out = []
+        for h, v in self.ewma.items():
+            if v > self.ratio * median:
+                self.strikes[h] = self.strikes.get(h, 0) + 1
+            else:
+                self.strikes[h] = 0
+            if self.strikes.get(h, 0) >= self.patience:
+                out.append(h)
+        return out
+
+
+class StepTimer:
+    def __init__(self):
+        self.t0: Optional[float] = None
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0
+        return False

@@ -1,0 +1,124 @@
+"""Hand-rolled functional optimizers (no optax in the container).
+
+AdamW (the paper trains char-LM/MNIST/QA with ADAM) and SGD with gradient
+clipping + the /4-on-plateau schedule the paper uses for word-PTB.  The
+update pipeline ends with the paper's master-weight clip to [-alpha, alpha]
+(core.qlinear.clip_tree) so Bernoulli probabilities stay valid — that clip is
+part of the algorithm, not a generic optimizer knob.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"          # adamw | sgd
+    lr: float = 2e-3             # paper: 0.002 for char-LM
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: float = 0.0       # 0 = off; paper word-PTB: 0.25
+    warmup_steps: int = 0
+    decay_steps: int = 0         # cosine horizon; 0 = constant
+    min_lr_frac: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: Array
+    m: Any
+    v: Any
+
+
+def opt_init(params: Any, cfg: OptConfig) -> OptState:
+    zeros = lambda p: jax.tree.map(jnp.zeros_like, p)
+    if cfg.kind == "adamw":
+        return OptState(step=jnp.zeros((), jnp.int32), m=zeros(params), v=zeros(params))
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros(params), v=None)
+
+
+def schedule(step: Array, cfg: OptConfig) -> Array:
+    lr = jnp.asarray(cfg.lr, jnp.float32)
+    s = step.astype(jnp.float32)
+    if cfg.warmup_steps > 0:
+        lr = lr * jnp.minimum(1.0, (s + 1.0) / cfg.warmup_steps)
+    if cfg.decay_steps > 0:
+        t = jnp.clip((s - cfg.warmup_steps) / max(cfg.decay_steps - cfg.warmup_steps, 1),
+                     0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        lr = lr * (cfg.min_lr_frac + (1.0 - cfg.min_lr_frac) * cos)
+    return lr
+
+
+def global_norm(tree: Any) -> Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, Array]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gnorm
+
+
+def opt_update(grads: Any, state: OptState, params: Any, cfg: OptConfig,
+               lr_scale: Array | float = 1.0) -> tuple[Any, OptState, dict]:
+    """Returns (new_params, new_state, metrics)."""
+    metrics = {}
+    if cfg.clip_norm > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    metrics["grad_norm"] = gnorm
+
+    step = state.step + 1
+    lr = schedule(state.step, cfg) * lr_scale
+    metrics["lr"] = lr
+
+    if cfg.kind == "adamw":
+        b1, b2 = cfg.b1, cfg.b2
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g, state.m, grads)
+        v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g),
+                         state.v, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, mm, vv):
+            u = (mm / bc1) / (jnp.sqrt(vv / bc2) + cfg.eps)
+            if cfg.weight_decay > 0:
+                u = u + cfg.weight_decay * p
+            return p - lr * u
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, OptState(step=step, m=m, v=v), metrics
+
+    # SGD with momentum buffer in m (paper's word-PTB setting uses plain SGD)
+    mom = 0.0
+    m = jax.tree.map(lambda mm, g: mom * mm + g, state.m, grads)
+    new_params = jax.tree.map(lambda p, mm: p - lr * mm, params, m)
+    return new_params, OptState(step=step, m=m, v=None), metrics
+
+
+class PlateauLR:
+    """Host-side plateau schedule (paper word-PTB: divide LR by 4 whenever
+    validation perplexity rises).  Produces an `lr_scale` fed to opt_update."""
+
+    def __init__(self, factor: float = 0.25):
+        self.factor = factor
+        self.best: Optional[float] = None
+        self.scale = 1.0
+
+    def update(self, val_metric: float) -> float:
+        if self.best is None or val_metric < self.best:
+            self.best = val_metric
+        else:
+            self.scale *= self.factor
+        return self.scale

@@ -1,0 +1,164 @@
+"""Chunked recurrences vs naive step-by-step oracles (the TPU block
+decompositions must be exact reformulations, not approximations)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import mamba2 as M
+from repro.models import rwkv6 as R
+from repro.models.layers import attention, _sdpa
+
+settings.register_profile("ci", max_examples=10, deadline=None)
+settings.load_profile("ci")
+
+
+# --- SSD (mamba2) ------------------------------------------------------------
+
+def _ssd_naive(x, dt, A, Bm, Cm):
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    h = jnp.zeros((Bsz, H, N, P))
+    ys = []
+    for t in range(S):
+        y, h = M.ssd_step(x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t], h)
+        ys.append(y)
+    return jnp.stack(ys, axis=1), h
+
+
+@given(st.integers(0, 10_000), st.sampled_from([4, 8, 16]),
+       st.sampled_from([8, 12, 16]))
+def test_ssd_chunked_equals_naive(seed, chunk, S):
+    k = jax.random.PRNGKey(seed)
+    ks = jax.random.split(k, 4)
+    Bsz, H, P, N = 2, 3, 4, 5
+    x = jax.random.normal(ks[0], (Bsz, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bsz, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (Bsz, S, N)) * 0.5
+    Cm = jax.random.normal(jax.random.fold_in(k, 9), (Bsz, S, N)) * 0.5
+    y_naive, h_naive = _ssd_naive(x, dt, A, Bm, Cm)
+    y_chunk, h_chunk = M.ssd_chunked(x, dt, A, Bm, Cm, chunk)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_naive),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_chunk), np.asarray(h_naive),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_chunked_with_initial_state_and_padding():
+    """Non-multiple seq length + nonzero h0 (prefill-then-decode contract)."""
+    k = jax.random.PRNGKey(1)
+    ks = jax.random.split(k, 5)
+    Bsz, S, H, P, N = 1, 11, 2, 4, 3
+    x = jax.random.normal(ks[0], (Bsz, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bsz, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (Bsz, S, N)) * 0.5
+    Cm = jax.random.normal(ks[4], (Bsz, S, N)) * 0.5
+    h0 = jax.random.normal(jax.random.fold_in(k, 7), (Bsz, H, N, P)) * 0.3
+
+    y_full, h_full = M.ssd_chunked(x, dt, A, Bm, Cm, chunk=4, h0=h0)
+    # naive from the same h0
+    h = h0
+    ys = []
+    for t in range(S):
+        y, h = M.ssd_step(x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t], h)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(jnp.stack(ys, 1)),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_full), np.asarray(h), rtol=1e-4,
+                               atol=1e-4)
+
+
+# --- WKV6 (rwkv) -------------------------------------------------------------
+
+def _wkv_naive(r, k, v, logw, u, S0):
+    Bsz, T, H, N = r.shape
+    S = S0
+    ys = []
+    for t in range(T):
+        y, S = R.wkv6_step(r[:, t], k[:, t], v[:, t], logw[:, t], u, S)
+        ys.append(y)
+    return jnp.stack(ys, axis=1), S
+
+
+@given(st.integers(0, 10_000), st.sampled_from([4, 8]), st.sampled_from([8, 13]))
+def test_wkv6_chunked_equals_naive(seed, chunk, T):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 5)
+    Bsz, H, N = 2, 2, 4
+    r = jax.random.normal(ks[0], (Bsz, T, H, N)) * 0.5
+    k = jax.random.normal(ks[1], (Bsz, T, H, N)) * 0.5
+    v = jax.random.normal(ks[2], (Bsz, T, H, N)) * 0.5
+    logw = -jnp.exp(jax.random.normal(ks[3], (Bsz, T, H, N)) * 0.3 - 1.0)
+    u = jax.random.normal(ks[4], (H, N)) * 0.3
+    S0 = jax.random.normal(jax.random.fold_in(key, 5), (Bsz, H, N, N)) * 0.2
+
+    y_c, S_c = R.wkv6_chunked(r, k, v, logw, u, chunk, S0)
+    y_n, S_n = _wkv_naive(r, k, v, logw, u, S0)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_n), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(S_c), np.asarray(S_n), rtol=1e-4,
+                               atol=1e-4)
+
+
+# --- attention ---------------------------------------------------------------
+
+def _mha_ref(q, k, v, causal, window):
+    """Dense reference with repeated KV (the layout the GQA einsum replaces)."""
+    B, Sq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    k = jnp.repeat(k, Hq // Hkv, axis=2)
+    v = jnp.repeat(v, Hq // Hkv, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(hd)
+    Skv = k.shape[1]
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kp <= qp
+    if window:
+        mask &= kp > qp - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2), (6, 1)])
+@pytest.mark.parametrize("window", [0, 5])
+def test_gqa_attention_vs_repeat_reference(hq, hkv, window):
+    key = jax.random.PRNGKey(0)
+    B, S, hd = 2, 12, 8
+    q = jax.random.normal(jax.random.fold_in(key, 1), (B, S, hq, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 2), (B, S, hkv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 3), (B, S, hkv, hd))
+    out = attention(q, k, v, causal=True, window=window, chunk=1024)
+    expect = _mha_ref(q, k, v, True, window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_chunked_attention_equals_unchunked():
+    key = jax.random.PRNGKey(7)
+    B, S, H, hd = 1, 32, 2, 4
+    q = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 3), (B, S, H, hd))
+    full = attention(q, k, v, causal=True, chunk=1024)
+    chunked = attention(q, k, v, causal=True, chunk=8)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(full),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_sliding_window_kv_slice_path():
+    """The windowed KV-slicing fast path == plain masked computation."""
+    key = jax.random.PRNGKey(8)
+    B, S, H, hd, win = 1, 64, 1, 4, 8
+    q = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 3), (B, S, H, hd))
+    sliced = attention(q, k, v, causal=True, window=win, chunk=16)  # slices KV
+    ref = _mha_ref(q, k, v, True, win)
+    np.testing.assert_allclose(np.asarray(sliced), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)

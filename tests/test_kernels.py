@@ -1,0 +1,85 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode): shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quantize as Q
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("mode", ["ternary", "binary"])
+@pytest.mark.parametrize("mkn", [(4, 256, 384), (128, 512, 512),
+                                 (1, 1024, 256), (67, 320, 136), (8, 64, 8)])
+def test_packed_matmul_matches_ref(mode, mkn):
+    M, K, N = mkn
+    kw, kx, ku = jax.random.split(jax.random.PRNGKey(M * K + N), 3)
+    w = jax.random.normal(kw, (K, N)) * 0.02
+    u = jax.random.uniform(ku, (K, N))
+    alpha = 0.05
+    wp = ops.quantize_pack(w, u, alpha, mode=mode)
+    wp_ref = (ref.quantize_pack_ternary_ref if mode == "ternary"
+              else ref.quantize_pack_binary_ref)(w, u, alpha)
+    np.testing.assert_array_equal(np.asarray(wp), np.asarray(wp_ref))
+
+    x = jax.random.normal(kx, (M, K), jnp.float32)
+    y = ops.packed_matmul(x, wp, K, alpha, mode=mode)
+    y_ref = (ref.ternary_matmul_ref if mode == "ternary"
+             else ref.binary_matmul_ref)(x, wp, K, alpha)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_packed_matmul_dtypes(dtype):
+    M, K, N = 16, 256, 128
+    kw, kx, ku = jax.random.split(jax.random.PRNGKey(0), 3)
+    w = jax.random.normal(kw, (K, N)) * 0.02
+    u = jax.random.uniform(ku, (K, N))
+    wp = ops.quantize_pack(w, u, 0.05, mode="ternary")
+    x = jax.random.normal(kx, (M, K)).astype(dtype)
+    y = ops.packed_matmul(x, wp, K, 0.05, mode="ternary")
+    y_ref = ref.ternary_matmul_ref(x, wp, K, 0.05)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_packed_matmul_batched_input():
+    kw, kx, ku = jax.random.split(jax.random.PRNGKey(1), 3)
+    w = jax.random.normal(kw, (128, 64)) * 0.02
+    u = jax.random.uniform(ku, w.shape)
+    wp = ops.quantize_pack(w, u, 0.05, mode="ternary")
+    x = jax.random.normal(kx, (2, 3, 128))
+    y = ops.packed_matmul(x, wp, 128, 0.05, mode="ternary")
+    assert y.shape == (2, 3, 64)
+    y2 = ops.packed_matmul(x.reshape(6, 128), wp, 128, 0.05, mode="ternary")
+    np.testing.assert_allclose(np.asarray(y).reshape(6, 64), np.asarray(y2),
+                               rtol=1e-5)
+
+
+@pytest.mark.parametrize("mode,group", [("ternary", 16), ("binary", 32)])
+def test_packed_linear_end_to_end(mode, group):
+    """PackedLinear == deterministic quantization matmul; 16x/32x bytes."""
+    K, N = 512, 256
+    w = jax.random.normal(jax.random.PRNGKey(2), (K, N)) * 0.02
+    alpha = Q.glorot_alpha(K, N)
+    lin = ops.PackedLinear.from_master(w, alpha, mode)
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, K))
+    y = lin(x)
+    qfn = Q.ternarize_deterministic if mode == "ternary" else Q.binarize_deterministic
+    y_ref = x @ qfn(w, alpha)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    assert lin.nbytes == K * N * 4 // group
+
+
+def test_quantize_pack_fused_equals_two_step():
+    """Fused kernel == (stochastic quantize, then pack) composition."""
+    w = jax.random.normal(jax.random.PRNGKey(4), (256, 128)) * 0.03
+    u = jax.random.uniform(jax.random.PRNGKey(5), w.shape)
+    a = 0.04
+    fused = ops.quantize_pack(w, u, a, mode="ternary")
+    q = Q.ternarize_stochastic(w, u, a) / a
+    np.testing.assert_array_equal(np.asarray(fused),
+                                  np.asarray(Q.pack_ternary(q)))

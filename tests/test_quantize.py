@@ -1,0 +1,137 @@
+"""Property + unit tests for the paper's core quantizers (Eqs. 1, 4-6)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantize as Q
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _w(seed, shape, scale=0.05):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+
+
+# --- Eq. 4-6: support + unbiasedness ----------------------------------------
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from(["binary", "ternary"]))
+def test_quantized_support(seed, mode):
+    """Sampled values land exactly in {-a,+a} / {-a,0,+a}."""
+    w = _w(seed, (16, 24))
+    alpha = Q.glorot_alpha(16, 24)
+    u = jax.random.uniform(jax.random.PRNGKey(seed ^ 1), w.shape)
+    q = (Q.binarize_stochastic if mode == "binary" else Q.ternarize_stochastic)(
+        w, u, alpha)
+    vals = {-alpha, 0.0, alpha} if mode == "ternary" else {-alpha, alpha}
+    got = set(np.unique(np.asarray(q)).tolist())
+    assert all(any(abs(g - v) < 1e-7 for v in vals) for g in got)
+
+
+@pytest.mark.parametrize("mode", ["binary", "ternary"])
+def test_stochastic_unbiased(mode):
+    """E[q] == clip(w) over many noise draws (the Bernoulli construction)."""
+    w = _w(0, (8, 8), scale=0.03)
+    alpha = Q.glorot_alpha(8, 8)
+    n = 4000
+    keys = jax.random.split(jax.random.PRNGKey(1), n)
+    f = Q.binarize_stochastic if mode == "binary" else Q.ternarize_stochastic
+    qs = jax.vmap(lambda k: f(w, jax.random.uniform(k, w.shape), alpha))(keys)
+    mean = jnp.mean(qs, axis=0)
+    np.testing.assert_allclose(np.asarray(mean),
+                               np.clip(np.asarray(w), -alpha, alpha),
+                               atol=4 * alpha / np.sqrt(n) * 3)
+
+
+def test_deterministic_matches_expectation_sign():
+    w = _w(3, (32, 32))
+    a = Q.glorot_alpha(32, 32)
+    qb = Q.binarize_deterministic(w, a)
+    assert np.all(np.sign(np.asarray(qb)) == np.where(np.asarray(w) >= 0, 1, -1))
+    qt = Q.ternarize_deterministic(w, a)
+    assert set(np.unique(np.asarray(qt) / a)).issubset({-1.0, 0.0, 1.0})
+
+
+# --- Eq. 1: straight-through estimator --------------------------------------
+
+def test_ste_gradient_is_identity():
+    w = _w(4, (6, 6))
+    a = Q.glorot_alpha(6, 6)
+    u = jax.random.uniform(jax.random.PRNGKey(5), w.shape)
+
+    def loss(w):
+        q = Q.quantize(w, "ternary", a, u, stochastic=True)
+        return jnp.sum(q * jnp.arange(6.0))
+
+    g = jax.grad(loss)(w)
+    expect = jnp.broadcast_to(jnp.arange(6.0), w.shape)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(expect), rtol=1e-6)
+
+
+def test_master_clip_keeps_probabilities_valid():
+    w = _w(6, (10, 10), scale=10.0)  # deliberately out of range
+    a = Q.glorot_alpha(10, 10)
+    wc = Q.clip_master(w, a)
+    assert float(jnp.max(jnp.abs(wc))) <= a + 1e-7
+
+
+# --- packing -----------------------------------------------------------------
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4), st.integers(1, 40))
+def test_pack_unpack_ternary_roundtrip(seed, kg, n):
+    k = 16 * kg
+    t = jax.random.randint(jax.random.PRNGKey(seed), (k, n), -1, 2).astype(jnp.float32)
+    packed = Q.pack_ternary(t)
+    assert packed.shape == (k // 16, n) and packed.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(Q.unpack_ternary(packed, k)),
+                                  np.asarray(t))
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 3), st.integers(1, 33))
+def test_pack_unpack_binary_roundtrip(seed, kg, n):
+    k = 32 * kg
+    b = jnp.where(jax.random.bernoulli(jax.random.PRNGKey(seed), 0.5, (k, n)),
+                  1.0, -1.0)
+    packed = Q.pack_binary(b)
+    np.testing.assert_array_equal(np.asarray(Q.unpack_binary(packed, k)),
+                                  np.asarray(b))
+
+
+def test_packed_sizes_match_paper_ratio():
+    """Paper Table 1: binary = fp32/32, ternary = fp32/16 weight bytes."""
+    shape = (1024, 1024)
+    fp = Q.packed_nbytes(shape, "fp32")
+    assert Q.packed_nbytes(shape, "binary") == fp // 32
+    assert Q.packed_nbytes(shape, "ternary") == fp // 16
+
+
+# --- baselines ---------------------------------------------------------------
+
+def test_binaryconnect_scale():
+    w = _w(7, (64, 64))
+    q = Q.binaryconnect(w)
+    a = float(jnp.mean(jnp.abs(w)))
+    assert np.allclose(np.abs(np.asarray(q)), a, rtol=1e-5)
+
+
+def test_twn_threshold_sparsity():
+    w = _w(8, (64, 64))
+    q = np.asarray(Q.twn(w))
+    frac_zero = (q == 0).mean()
+    assert 0.05 < frac_zero < 0.95  # threshold keeps a nontrivial support
+
+
+def test_dorefa_levels():
+    w = _w(9, (32, 32))
+    for bits in (2, 3, 4):
+        q = np.asarray(Q.dorefa(w, bits))
+        assert len(np.unique(q)) <= 2 ** bits
+
+
+def test_quant_spec_bits():
+    from repro.core.quantize import QuantSpec
+    assert QuantSpec(mode="binary").weight_bits == 1
+    assert QuantSpec(mode="ternary").weight_bits == 2
+    assert QuantSpec(mode="none").weight_bits == 32

@@ -1,0 +1,132 @@
+"""Serving path: prefill + decode must reproduce the full forward exactly
+(per family), ring buffers must mask correctly, MoE decode must not drop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.shapes import decode_context
+from repro.models import transformer as T
+from repro.serve.kvcache import AttnCache, cache_init, cache_positions, cache_update
+from repro.serve.sampler import sample
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_matches_forward(arch):
+    import dataclasses
+    cfg = get_config(arch).reduced()
+    if cfg.n_experts:
+        # decouple the consistency check from capacity-drop nondeterminism
+        # (prefill sees T-1 tokens, forward sees T -> different capacities);
+        # drop semantics are covered in test_moe.py
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    params = T.model_init(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 24
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab)
+    kw = {}
+    ctx, src = decode_context(cfg, S)
+    if cfg.family == "vlm":
+        kw["img"] = jax.random.normal(jax.random.PRNGKey(3),
+                                      (B, cfg.n_img_tokens, cfg.d_model))
+        src = cfg.n_img_tokens
+    if cfg.family == "audio":
+        kw["enc_frames"] = jax.random.normal(jax.random.PRNGKey(3),
+                                             (B, S, cfg.d_model))
+        tokens = tokens[:, :12]
+        ctx = 12
+
+    caches = T.init_caches(cfg, B, ctx, src_len=src, dtype=jnp.float32)
+    lg_pre, caches = T.prefill(params, tokens[:, :-1], caches, cfg, **kw)
+    lg_dec, caches = T.decode_step(params, tokens[:, -1], caches, cfg)
+    lg_full, _ = T.forward(params, tokens, cfg, training=False, **kw)
+    np.testing.assert_allclose(np.asarray(lg_pre), np.asarray(lg_full[:, -2]),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(lg_dec), np.asarray(lg_full[:, -1]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_multi_step_decode_consistency():
+    """Greedy continuation via decode == teacher-forced forward argmax."""
+    cfg = get_config("qwen3-1.7b").reduced()
+    params = T.model_init(jax.random.PRNGKey(0), cfg)
+    B, S, n_new = 1, 16, 4
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    caches = T.init_caches(cfg, B, S + n_new, dtype=jnp.float32)
+    logits, caches = T.prefill(params, tokens, caches, cfg)
+    seq = tokens
+    for _ in range(n_new):
+        nxt = jnp.argmax(logits[:, :cfg.vocab], axis=-1).astype(jnp.int32)
+        seq = jnp.concatenate([seq, nxt[:, None]], axis=1)
+        logits, caches = T.decode_step(params, nxt, caches, cfg)
+    # teacher-forced check of the SAME sequence
+    full, _ = T.forward(params, seq, cfg, training=False)
+    for i in range(n_new):
+        tf = jnp.argmax(full[:, S - 1 + i, :cfg.vocab], axis=-1)
+        assert int(tf[0]) == int(seq[0, S + i])
+
+
+# --- ring buffer -------------------------------------------------------------
+
+def test_ring_cache_positions():
+    c = cache_init(1, 4, 1, 2, jnp.float32, ring=True)
+    assert np.all(np.asarray(cache_positions(c)) == -1)
+    for t in range(6):
+        c = cache_update(c, jnp.full((1, 1, 1, 2), float(t)),
+                         jnp.full((1, 1, 1, 2), float(t)))
+    pos = np.asarray(cache_positions(c))
+    # after 6 writes into 4 slots: slots hold positions 4,5,2,3
+    assert sorted(pos.tolist()) == [2, 3, 4, 5]
+    # slot contents match their claimed positions
+    for s, p in enumerate(pos):
+        assert float(c.k[0, s, 0, 0]) == float(p)
+
+
+def test_ring_prefill_keeps_last_window():
+    c = cache_init(1, 4, 1, 1, jnp.float32, ring=True)
+    k = jnp.arange(10.0).reshape(1, 10, 1, 1)
+    c = cache_update(c, k, k)
+    pos = np.asarray(cache_positions(c))
+    assert sorted(pos.tolist()) == [6, 7, 8, 9]
+    for s, p in enumerate(pos):
+        assert float(c.k[0, s, 0, 0]) == float(p)
+
+
+def test_linear_cache_append_and_mask():
+    c = cache_init(2, 8, 1, 2, jnp.float32)
+    c = cache_update(c, jnp.ones((2, 3, 1, 2)), jnp.ones((2, 3, 1, 2)))
+    pos = np.asarray(cache_positions(c))
+    assert pos.tolist() == [0, 1, 2, -1, -1, -1, -1, -1]
+    assert int(c.pos) == 3
+
+
+def test_cache_is_pytree_with_static_ring_flag():
+    c = cache_init(1, 4, 1, 2, jnp.float32, ring=True)
+    leaves, treedef = jax.tree_util.tree_flatten(c)
+    assert len(leaves) == 3  # k, v, pos — ring stays aux metadata
+    c2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert c2.ring is True
+
+
+def test_swa_arch_uses_ring_cache_smaller_than_context():
+    cfg = get_config("mixtral-8x7b").reduced()
+    caches = T.init_caches(cfg, 1, 4096, dtype=jnp.float32)
+    attn = caches["stack"][0]["attn"]
+    assert attn.ring
+    assert attn.k.shape[2] <= cfg.window + T.DECODE_MARGIN
+
+
+# --- sampler -----------------------------------------------------------------
+
+def test_sampler_greedy_and_topk():
+    logits = jnp.array([[0.1, 3.0, -1.0, 2.0]])
+    assert int(sample(logits, jax.random.PRNGKey(0), temperature=0.0)[0]) == 1
+    draws = {int(sample(logits, jax.random.PRNGKey(i), temperature=1.0,
+                        top_k=2)[0]) for i in range(50)}
+    assert draws.issubset({1, 3})
+
+
+def test_sampler_vocab_mask():
+    logits = jnp.array([[0.0, 1.0, 99.0]])  # index 2 is a padded slot
+    tok = sample(logits, jax.random.PRNGKey(0), temperature=0.0, vocab=2)
+    assert int(tok[0]) == 1

@@ -1,0 +1,285 @@
+"""Training substrate: optimizer, compression, checkpointing, fault
+tolerance, elasticity, data pipeline statelessness."""
+import json
+import os
+import signal
+import tempfile
+import threading
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.quantize import QuantSpec
+from repro.core.qlinear import leaf_alpha
+from repro.data.synth import token_stream
+from repro.data.text import ByteCorpus
+from repro.models import transformer as T
+from repro.train import checkpoint as CK
+from repro.train import compress as C
+from repro.train.elastic import best_mesh_shape
+from repro.train.fault_tolerance import PreemptionHandler, StragglerMonitor
+from repro.train.optimizer import (OptConfig, PlateauLR, clip_by_global_norm,
+                                   opt_init, opt_update, schedule)
+from repro.train.train_step import make_train_step, train_state_init
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+# --- optimizer ---------------------------------------------------------------
+
+def test_adamw_reduces_quadratic():
+    cfg = OptConfig(kind="adamw", lr=0.1)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = opt_init(params, cfg)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = opt_update(grads, state, params, cfg)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.05
+
+
+def test_schedule_warmup_cosine():
+    cfg = OptConfig(lr=1.0, warmup_steps=10, decay_steps=100, min_lr_frac=0.1)
+    assert float(schedule(jnp.asarray(0), cfg)) == pytest.approx(0.1)
+    assert float(schedule(jnp.asarray(9), cfg)) == pytest.approx(1.0)
+    assert float(schedule(jnp.asarray(1000), cfg)) == pytest.approx(0.1)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0, rel=1e-4)
+
+
+def test_plateau_lr_quarters_on_rise():
+    p = PlateauLR()
+    assert p.update(100.0) == 1.0
+    assert p.update(90.0) == 1.0
+    assert p.update(95.0) == 0.25      # paper: divide by 4 on val increase
+
+
+def test_quantized_train_keeps_masters_in_range():
+    cfg = get_config("qwen3-0.6b").reduced()
+    params = T.model_init(jax.random.PRNGKey(0), cfg)
+    opt = OptConfig(lr=5e-3)
+    state = train_state_init(params, opt, jax.random.PRNGKey(1))
+    step = jax.jit(make_train_step(cfg, opt))
+    for i in range(5):
+        b = {k: jnp.asarray(v) for k, v in
+             token_stream(i, 4, 16, cfg.vocab).items()}
+        state, _ = step(state, b)
+    lp = state.params["stack"][0]
+    w = lp["attn"]["Wq"]
+    a = leaf_alpha(w.shape)
+    assert float(jnp.max(jnp.abs(w))) <= a + 1e-6
+
+
+# --- gradient compression ----------------------------------------------------
+
+@given(st.integers(0, 2**31 - 1))
+def test_ternary_compress_support_and_scale(seed):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (32,)) * 0.1
+    t, scale = C.ternary_compress(g, jax.random.PRNGKey(seed ^ 3))
+    lv = np.unique(np.round(np.asarray(t / scale), 5))
+    assert set(lv).issubset({-1.0, 0.0, 1.0})
+
+
+def test_ternary_compress_unbiased():
+    g = jnp.array([0.05, -0.02, 0.0, 0.08])
+    keys = jax.random.split(jax.random.PRNGKey(0), 6000)
+    ts = jax.vmap(lambda k: C.ternary_compress(g, k)[0])(keys)
+    np.testing.assert_allclose(np.asarray(jnp.mean(ts, 0)), np.asarray(g),
+                               atol=6e-3)
+
+
+def test_error_feedback_conserves_signal():
+    """residual + emitted == corrected gradient, exactly."""
+    g = {"w": jnp.array([0.03, -0.07, 0.01])}
+    res = {"w": jnp.array([0.01, 0.0, -0.02])}
+    out, new_res = C.compress_tree(g, jax.random.PRNGKey(0), res)
+    np.testing.assert_allclose(
+        np.asarray(out["w"] + new_res["w"]),
+        np.asarray(g["w"] + res["w"]), rtol=1e-6)
+
+
+def test_compressed_bytes_ratio():
+    g = {"w": jnp.zeros((1024, 1024))}
+    full, packed = C.compressed_bytes(g)
+    assert full / packed > 15  # ~16x (2-bit codes + scale)
+
+
+# --- checkpointing -----------------------------------------------------------
+
+def _tiny_state():
+    cfg = get_config("qwen3-0.6b").reduced()
+    params = T.model_init(jax.random.PRNGKey(0), cfg)
+    return train_state_init(params, OptConfig(), jax.random.PRNGKey(1)), cfg
+
+
+def test_checkpoint_roundtrip_exact():
+    state, _ = _tiny_state()
+    with tempfile.TemporaryDirectory() as d:
+        CK.save(state, d, 3)
+        restored = CK.restore(state, d)
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomicity_and_gc():
+    state, _ = _tiny_state()
+    with tempfile.TemporaryDirectory() as d:
+        for s in (1, 2, 3, 4, 5):
+            CK.save(state, d, s, keep=2)
+        kept = sorted(p.name for p in Path(d).glob("step_*"))
+        assert kept == ["step_00000004", "step_00000005"]
+        # a stale tmp dir (simulated crash) must be cleaned by the next save
+        crash = Path(d) / "step_00000099.tmp-dead"
+        crash.mkdir()
+        CK.save(state, d, 6, keep=2)
+        assert not crash.exists()
+        assert CK.latest_step(d) == 6
+
+
+def test_checkpoint_restore_rejects_shape_mismatch():
+    state, _ = _tiny_state()
+    with tempfile.TemporaryDirectory() as d:
+        CK.save(state, d, 1)
+        bad = state._replace(rng=jnp.zeros((7,), jnp.uint32))
+        with pytest.raises(ValueError):
+            CK.restore(bad, d, 1)
+
+
+def test_async_checkpointer_overlaps_and_matches():
+    state, _ = _tiny_state()
+    with tempfile.TemporaryDirectory() as d:
+        ck = CK.AsyncCheckpointer(d)
+        ck.save_async(state, 10)
+        ck.wait()
+        restored = CK.restore(state, d, 10)
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resume_is_sample_exact():
+    """Stateless (step-indexed) data + checkpoint => identical trajectory."""
+    cfg = get_config("qwen3-0.6b").reduced()
+    opt = OptConfig(lr=1e-3)
+    step = jax.jit(make_train_step(cfg, opt))
+
+    def run(state, s0, s1):
+        for i in range(s0, s1):
+            b = {k: jnp.asarray(v) for k, v in
+                 token_stream(i, 4, 16, cfg.vocab).items()}
+            state, m = step(state, b)
+        return state, float(m["loss"])
+
+    params = T.model_init(jax.random.PRNGKey(0), cfg)
+    st = train_state_init(params, opt, jax.random.PRNGKey(1))
+    straight, loss_straight = run(st, 0, 6)
+
+    st2 = train_state_init(params, opt, jax.random.PRNGKey(1))
+    st2, _ = run(st2, 0, 3)
+    with tempfile.TemporaryDirectory() as d:
+        CK.save(st2, d, 3)
+        resumed = CK.restore(st2, d, 3)
+    resumed, loss_resumed = run(resumed, 3, 6)
+    assert loss_resumed == pytest.approx(loss_straight, rel=1e-6)
+
+
+# --- fault tolerance / elasticity --------------------------------------------
+
+def test_preemption_handler_flag():
+    h = PreemptionHandler(signals=())
+    assert not h.preempted
+    h.simulate()
+    assert h.preempted
+
+
+def test_straggler_monitor_flags_slow_host():
+    m = StragglerMonitor(n_hosts=4, ratio=1.5, patience=2)
+    flagged = []
+    for _ in range(4):
+        flagged = m.record_all({0: 1.0, 1: 1.0, 2: 1.05, 3: 2.5})
+    assert flagged == [3]
+
+
+def test_straggler_monitor_recovers():
+    m = StragglerMonitor(n_hosts=2, ratio=1.5, patience=2)
+    m.record_all({0: 1.0, 1: 3.0})
+    m.record_all({0: 1.0, 1: 1.0})   # host recovers -> strikes reset
+    for _ in range(3):
+        out = m.record_all({0: 1.0, 1: 1.0})
+    assert out == []
+
+
+def test_best_mesh_shape_preserves_model_axis():
+    plan = best_mesh_shape(256, want_model=16, global_batch=256)
+    assert plan.shape == (16, 16) and plan.dropped_devices == 0
+    assert 256 % plan.shape[0] == 0
+    # lose a host (8 chips): keep model=16, shrink data, rescale batch
+    plan = best_mesh_shape(248, want_model=16, global_batch=256)
+    assert plan.shape[-1] == 16 and plan.dropped_devices < 16
+    assert plan.shape[0] == 15 and plan.per_replica_batch == 17
+
+
+def test_best_mesh_multi_pod():
+    plan = best_mesh_shape(512, want_model=16, global_batch=256, pods=2)
+    assert plan.shape == (2, 16, 16)
+    assert plan.per_replica_batch * 2 * 16 == 256
+
+
+# --- data pipeline -----------------------------------------------------------
+
+def test_corpus_batches_deterministic_and_disjoint_hosts():
+    corpus = ByteCorpus.from_bytes(bytes(range(97, 123)) * 400)
+    b1 = corpus.batch("train", 7, 8, 16)
+    b2 = corpus.batch("train", 7, 8, 16)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["targets"][:, :-1])
+    h0 = corpus.batch("train", 7, 8, 16, host_id=0, n_hosts=2)
+    h1 = corpus.batch("train", 7, 8, 16, host_id=1, n_hosts=2)
+    assert h0["tokens"].shape[0] == 4
+    np.testing.assert_array_equal(np.vstack([h0["tokens"], h1["tokens"]]),
+                                  b1["tokens"])
+
+
+def test_corpus_splits_do_not_overlap():
+    corpus = ByteCorpus.from_bytes(b"x" * 1000)
+    t, v, te = (corpus.splits[s] for s in ("train", "valid", "test"))
+    assert t[1] <= v[0] and v[1] <= te[0] and te[1] == 1000
+
+
+def test_prefetcher_orders_steps():
+    from repro.data.loader import Prefetcher
+    pf = Prefetcher(lambda s: {"x": np.full((2,), s)}, start_step=5, depth=2)
+    got = [next(pf) for _ in range(3)]
+    pf.close()
+    assert [s for s, _ in got] == [5, 6, 7]
+    assert float(got[0][1]["x"][0]) == 5.0
+
+
+def test_compressed_dp_train_step():
+    """Ternary-compressed data-parallel gradients (shard_map path): step
+    runs, loss finite, error-feedback residual updates."""
+    from repro.runtime import use_mesh
+    mesh = jax.make_mesh((1,), ("data",))
+    cfg = get_config("qwen3-0.6b").reduced()
+    params = T.model_init(jax.random.PRNGKey(0), cfg)
+    opt = OptConfig(lr=1e-3)
+    st = train_state_init(params, opt, jax.random.PRNGKey(1), compress=True)
+    assert st.residual is not None
+    step = jax.jit(make_train_step(cfg, opt, mesh=mesh, compress_grads=True))
+    with use_mesh(mesh):
+        b = {k: jnp.asarray(v) for k, v in
+             token_stream(0, 4, 16, cfg.vocab).items()}
+        st2, m = step(st, b)
+    assert np.isfinite(float(m["loss"]))
+    # residual picked up the quantization error somewhere
+    delta = sum(float(jnp.sum(jnp.abs(a))) for a in jax.tree.leaves(st2.residual))
+    assert delta > 0.0

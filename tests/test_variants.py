@@ -1,0 +1,118 @@
+"""Perf-variant correctness: the beyond-paper optimizations must not change
+semantics (packed comms: bit-exact; parallel block: well-formed training)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.qlinear import quantize_tree
+from repro.core.quantize import QuantSpec
+from repro.data.synth import token_stream
+from repro.models import transformer as T
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import make_train_step, train_state_init
+
+
+def test_packed_comms_is_bit_exact():
+    """The pack -> (would-be gather) -> unpack round-trip in quantize_tree
+    must reproduce the plain quantized weights exactly."""
+    spec = QuantSpec(mode="ternary", norm="channel")
+    spec_packed = dataclasses.replace(spec, packed_comms=True)
+    params = {"Wq": jax.random.normal(jax.random.PRNGKey(0), (64, 32)) * 0.02,
+              "stack": {"Wup": jax.random.normal(jax.random.PRNGKey(1),
+                                                 (3, 48, 16)) * 0.02}}
+    rng = jax.random.PRNGKey(2)
+    q_plain = quantize_tree(params, spec, rng, compute_dtype=jnp.float32)
+    q_packed = quantize_tree(params, spec_packed, rng,
+                             compute_dtype=jnp.float32)
+    for a, b in zip(jax.tree.leaves(q_plain), jax.tree.leaves(q_packed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_packed_comms_gradients_flow_to_masters():
+    spec = QuantSpec(mode="ternary", norm="channel", packed_comms=True)
+    w = jax.random.normal(jax.random.PRNGKey(0), (32, 16)) * 0.02
+
+    def loss(params):
+        q = quantize_tree(params, spec, jax.random.PRNGKey(1))
+        return jnp.sum(q["Wq"] * 2.0)
+
+    g = jax.grad(loss)({"Wq": w})["Wq"]
+    np.testing.assert_allclose(np.asarray(g), 2.0, rtol=1e-6)
+
+
+def test_packed_comms_skips_non_multiple_k():
+    """K not divisible by the group: falls back to plain cast, no crash."""
+    spec = QuantSpec(mode="ternary", norm="channel", packed_comms=True)
+    params = {"Wq": jax.random.normal(jax.random.PRNGKey(0), (30, 8)) * 0.02}
+    q = quantize_tree(params, spec, jax.random.PRNGKey(1))
+    vals = np.unique(np.round(np.asarray(q["Wq"]) /
+                              np.max(np.abs(np.asarray(q["Wq"]))), 4))
+    assert len(vals) <= 3
+
+
+def test_parallel_block_trains():
+    cfg = dataclasses.replace(get_config("qwen3-0.6b").reduced(),
+                              parallel_block=True)
+    params = T.model_init(jax.random.PRNGKey(0), cfg)
+    opt = OptConfig(lr=1e-3)
+    st = train_state_init(params, opt, jax.random.PRNGKey(1))
+    step = jax.jit(make_train_step(cfg, opt))
+    losses = []
+    for i in range(4):
+        b = {k: jnp.asarray(v) for k, v in
+             token_stream(i, 4, 32, cfg.vocab).items()}
+        st, m = step(st, b)
+        losses.append(float(m["loss"]))
+    assert np.isfinite(losses).all()
+
+
+def test_dots_remat_policy_matches_full():
+    """Remat policy changes scheduling, not values."""
+    cfg = get_config("qwen3-0.6b").reduced()
+    params = T.model_init(jax.random.PRNGKey(0), cfg)
+    b = {k: jnp.asarray(v) for k, v in token_stream(0, 2, 16, cfg.vocab).items()}
+
+    def loss(cfg):
+        l, _ = T.lm_loss(params, b, cfg, training=True,
+                         rng=jax.random.PRNGKey(1))
+        return float(l)
+
+    l_full = loss(cfg)
+    l_dots = loss(dataclasses.replace(cfg, remat_policy="dots"))
+    assert l_full == pytest.approx(l_dots, rel=1e-5)
+
+
+def test_serve_param_pspec_drops_fsdp_axes():
+    from jax.sharding import AbstractMesh, PartitionSpec as P
+    from repro.launch.sharding import serve_param_pspec
+    import jax.tree_util as jtu
+    mesh = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    path = (jtu.DictKey("Wq"),)
+    leaf = jax.ShapeDtypeStruct((4096, 4096), jnp.float32)
+    assert serve_param_pspec(path, leaf, mesh) == P(None, "model")
+
+
+def test_quantize_embeddings_flag():
+    """Default (paper): embed/head stay fp.  With the flag, they quantize."""
+    spec = QuantSpec(mode="ternary", norm="channel")
+    params = {"embed": jax.random.normal(jax.random.PRNGKey(0), (64, 16)),
+              "head": jax.random.normal(jax.random.PRNGKey(1), (16, 64)),
+              "Wq": jax.random.normal(jax.random.PRNGKey(2), (16, 16)) * 0.02}
+    rng = jax.random.PRNGKey(3)
+    q = quantize_tree(params, spec, rng)
+    assert len(np.unique(np.asarray(q["embed"]))) > 3      # untouched
+    spec_e = dataclasses.replace(spec, quantize_embeddings=True)
+    q = quantize_tree(params, spec_e, rng)
+    for name in ("embed", "head", "Wq"):
+        assert len(np.unique(np.asarray(q[name]))) <= 3, name
+
+    cfg = dataclasses.replace(get_config("qwen3-0.6b").reduced(),
+                              quant=spec_e)
+    p = T.model_init(jax.random.PRNGKey(0), cfg)
+    logits, _ = T.forward(p, jnp.zeros((2, 8), jnp.int32), cfg,
+                          training=True, rng=jax.random.PRNGKey(1))
+    assert bool(jnp.isfinite(logits).all())
