@@ -24,9 +24,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quantize as Q
+from repro.core.qtensor import export_packed, is_qtensor
 from repro.core.recurrent_bn import BNParams, BNState, bn_apply, bn_init
+from repro.kernels import ops as OPS
 
 Array = jax.Array
+
+# The BN-LSTM keeps the paper's lowercase parameter names; this is the
+# explicit QuantPolicy equivalent of Algorithm 1's split (quantize the
+# recurrent/input matrices, keep the softmax classifier 'ws' and all
+# biases/BN parameters fp).
+RNN_POLICY = Q.QuantPolicy(include=("wx", "wh"))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,6 +100,13 @@ def rnn_lm_init(key, cfg: RNNConfig) -> dict:
 # ---------------------------------------------------------------------------
 
 
+def export_packed_rnn(params: dict, cfg: RNNConfig) -> dict:
+    """Pack a trained BN-LSTM/GRU master tree for serving: every `wx`/`wh`
+    becomes a QTensor; head + biases + BN parameters stay fp.  The result
+    feeds `rnn_lm_apply` unchanged (training=False)."""
+    return export_packed(params, cfg.quant, policy=RNN_POLICY)
+
+
 def _quantized_weights(params, cfg: RNNConfig, rng: Optional[Array],
                        training: bool = True):
     out = []
@@ -99,6 +114,15 @@ def _quantized_weights(params, cfg: RNNConfig, rng: Optional[Array],
                   and cfg.quant.mode in ("binary", "ternary"))
     for l, lp in enumerate(params["layers"]):
         wx, wh = lp["wx"], lp["wh"]
+        if is_qtensor(wx) and is_qtensor(wh):
+            # exported packed tree: weights are already the serving artifact
+            out.append((wx, wh))
+            continue
+        if is_qtensor(wx) or is_qtensor(wh):
+            raise ValueError(
+                f"layer {l}: mixed packed/fp weights (wx packed={is_qtensor(wx)}, "
+                f"wh packed={is_qtensor(wh)}); export both or neither — a raw "
+                f"master here would silently serve unquantized")
         ax = Q.glorot_alpha(*wx.shape)
         ah = Q.glorot_alpha(*wh.shape)
         if cfg.quant.enabled and stochastic:
@@ -170,17 +194,22 @@ def rnn_lm_apply(variables: dict, tokens: Array, cfg: RNNConfig, *,
 
         if l == 0:
             # (B,T) gather of quantized rows — identical to one-hot @ qx.
-            x_proj_seq = jnp.take(qx, x_seq, axis=0)  # (B, T, gH)
+            # A packed qx decodes first: the gather itself is already
+            # MAC-free, and layer 0's input projection is the one place the
+            # serving path touches whole rows instead of a matmul.
+            rows = qx.dequantize(cfg.dtype) if is_qtensor(qx) else qx
+            x_proj_seq = jnp.take(rows, x_seq, axis=0)  # (B, T, gH)
         else:
-            x_proj_seq = jnp.einsum("btd,dg->btg", x_seq, qx)
+            x_proj_seq = OPS.qmatmul(x_seq, qx)
 
         if cfg.cell == "lstm":
             def step(carry, x_proj_t):
                 h, c, s_x, s_h, s_c = carry
                 axn, s_x = bn_apply(x_proj_t, lp["bn_x"], s_x, training=training,
                                     trainable_gamma=False, eps=cfg.eps, momentum=cfg.momentum)
-                ahn, s_h = bn_apply(h @ qh, lp["bn_h"], s_h, training=training,
-                                    trainable_gamma=False, eps=cfg.eps, momentum=cfg.momentum)
+                ahn, s_h = bn_apply(OPS.qmatmul(h, qh), lp["bn_h"], s_h,
+                                    training=training, trainable_gamma=False,
+                                    eps=cfg.eps, momentum=cfg.momentum)
                 h, c, s_c = _lstm_step(h, c, axn, ahn, lp["b"], lp["bn_c"], s_c, cfg, training)
                 return (h, c, s_x, s_h, s_c), h
 
@@ -192,8 +221,9 @@ def rnn_lm_apply(variables: dict, tokens: Array, cfg: RNNConfig, *,
                 h, s_x, s_h = carry
                 axn, s_x = bn_apply(x_proj_t, lp["bn_x"], s_x, training=training,
                                     trainable_gamma=False, eps=cfg.eps, momentum=cfg.momentum)
-                ahn, s_h = bn_apply(h @ qh, lp["bn_h"], s_h, training=training,
-                                    trainable_gamma=False, eps=cfg.eps, momentum=cfg.momentum)
+                ahn, s_h = bn_apply(OPS.qmatmul(h, qh), lp["bn_h"], s_h,
+                                    training=training, trainable_gamma=False,
+                                    eps=cfg.eps, momentum=cfg.momentum)
                 H = cfg.d_hidden
                 ax_r, ax_z, ax_g = axn[..., :H], axn[..., H:2 * H], axn[..., 2 * H:]
                 ah_r, ah_z, ah_g = ahn[..., :H], ahn[..., H:2 * H], ahn[..., 2 * H:]

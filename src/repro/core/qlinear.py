@@ -1,16 +1,20 @@
 """The paper's technique as a composable layer for arbitrary matmul stacks.
 
-Convention: any parameter-dict key starting with a capital 'W' is a
-*quantizable matmul weight*; everything else (embeddings, norms, biases,
-routers, decay vectors, BN/scale parameters) stays full precision — mirroring
-the paper's own split (Algorithm 1 quantizes the eight recurrent matrices and
+Which leaves quantize is decided by an explicit `QuantPolicy` resolved from
+the spec (`spec.policy()`, core/quantize.py) — fnmatch globs over leaf names
+and tree paths, defaulting to the repo convention of capital-'W' matmul
+weights.  Everything the policy rejects (embeddings, norms, biases, routers,
+decay vectors, BN/scale parameters) stays full precision — mirroring the
+paper's own split (Algorithm 1 quantizes the eight recurrent matrices and
 keeps biases/BN/softmax-classifier fp).
 
-`quantize_tree(params, spec, rng)` quantizes every such leaf ONCE per forward
-pass (paper Algorithm 1 lines 2-6), with straight-through gradients to the fp
-master leaves.  Stacked per-layer weights (leading scan dimension) are
-quantized in one shot, so the sampling sits OUTSIDE `lax.scan` exactly like the
-paper samples outside the time loop.
+`quantize_tree(params, spec, rng)` quantizes every policy-matching leaf ONCE
+per forward pass (paper Algorithm 1 lines 2-6), with straight-through
+gradients to the fp master leaves.  Stacked per-layer weights (leading scan
+dimension) are quantized in one shot, so the sampling sits OUTSIDE `lax.scan`
+exactly like the paper samples outside the time loop.  Already-exported
+`QTensor` leaves (core/qtensor.py) pass through untouched, so the same model
+code serves packed weights.
 
 For the transformer pool, the BN of Eq. (7) is adapted to a learnable
 per-output-channel scale (`norm='channel'`): companion leaves named
@@ -26,55 +30,42 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quantize as Q
+from repro.core.qtensor import is_qtensor
+from repro.core.quantize import leaf_alpha  # noqa: F401  (re-export)
 from repro.runtime import constrain_param
 
 Array = jax.Array
 
 
 def is_quantizable(path_key: str, spec: Optional[Q.QuantSpec] = None) -> bool:
-    if path_key.startswith("W"):
-        return True
-    # the paper keeps embeddings/classifier fp; the flag makes the trade
-    # explorable (embedding tables dominate small-model memory)
-    if spec is not None and spec.quantize_embeddings and \
-            path_key in ("embed", "head"):
-        return True
-    return False
+    """Thin wrapper over the spec's QuantPolicy (kept for callers that only
+    have a leaf name; prefer `spec.policy().matches(path, leaf)`)."""
+    spec = spec if spec is not None else Q.QuantSpec()
+    return spec.policy().matches_name(path_key)
 
 
-def _path_str(path) -> str:
-    out = []
-    for p in path:
-        if hasattr(p, "key"):
-            out.append(str(p.key))
-        elif hasattr(p, "idx"):
-            out.append(str(p.idx))
-        else:
-            out.append(str(p))
-    return "/".join(out)
-
-
-def leaf_alpha(shape) -> float:
-    """Glorot alpha from the matmul dims (last two axes; leading axes are
-    layer-stack / expert dims)."""
-    if len(shape) < 2:
-        return 1.0
-    return Q.glorot_alpha(int(shape[-2]), int(shape[-1]))
+_path_str = Q.path_str  # canonical leaf naming shared with policy + export
 
 
 def quantize_tree(params: Any, spec: Q.QuantSpec, rng: Optional[Array],
                   compute_dtype=None) -> Any:
-    """Quantize every 'W*' leaf (STE); pass everything else through.
+    """Quantize every policy-matching leaf (STE); pass everything else through.
 
     `compute_dtype` additionally casts the (quantized or fp) matmul weights
     to the model's compute precision (bf16 on TPU) AFTER quantization — the
     master weights and the STE path stay fp32, matching mixed-precision
     practice and keeping matmuls on the MXU fast path.
+
+    Already-packed `QTensor` leaves (an exported serving tree) pass through
+    verbatim — they are consumed packed by `kernels.ops.qmatmul`.
     """
+    policy = spec.policy()
+
     def f(path, leaf):
+        if is_qtensor(leaf):
+            return leaf
         name = _path_str(path)
-        last = path[-1].key if hasattr(path[-1], "key") else ""
-        if not is_quantizable(str(last), spec) or leaf.ndim < 2:
+        if not policy.matches(path, leaf):
             return leaf
 
         def cast(w):
@@ -130,21 +121,22 @@ def quantize_tree(params: Any, spec: Q.QuantSpec, rng: Optional[Array],
                           alpha)
         return cast(Q.apply_quant(leaf, spec, alpha, None))
 
-    return jax.tree_util.tree_map_with_path(f, params)
+    return jax.tree_util.tree_map_with_path(f, params, is_leaf=is_qtensor)
 
 
 def clip_tree(params: Any, spec: Q.QuantSpec) -> Any:
-    """Clip master 'W*' leaves to [-alpha, alpha] after an optimizer step."""
+    """Clip quantizable master leaves to [-alpha, alpha] after an optimizer
+    step (keeps the Bernoulli probabilities valid)."""
     if not spec.enabled or spec.mode not in ("binary", "ternary"):
         return params
+    policy = spec.policy()
 
     def f(path, leaf):
-        last = str(path[-1].key) if hasattr(path[-1], "key") else ""
-        if is_quantizable(last, spec) and leaf.ndim >= 2:
+        if not is_qtensor(leaf) and policy.matches(path, leaf):
             return Q.clip_master(leaf, leaf_alpha(leaf.shape))
         return leaf
 
-    return jax.tree_util.tree_map_with_path(f, params)
+    return jax.tree_util.tree_map_with_path(f, params, is_leaf=is_qtensor)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,184 @@
+"""`QTensor`: the one quantized-weight representation, training -> serving.
+
+The paper's product is the HANDOFF — binary/ternary weights learned with
+stochastic STE training become packed, MAC-free weights at inference (12x
+memory / 10x claimed speedup).  `QTensor` is that artifact as a first-class
+jax pytree:
+
+  * `codes`   — uint32 bit-packed values, packed along the contraction axis
+                ({0b00:0, 0b01:+1, 0b11:-1} 2-bit ternary, {0:-1, 1:+1}
+                1-bit binary; see core/quantize.py).  Leading axes (layer
+                stacks, experts) are preserved, so a stacked (R, K, N)
+                master packs to (R, ceil(K/G), N) and `lax.scan` /
+                `tree.map(lambda l: l[r], ...)` slice it exactly like the
+                fp tree they replace.
+  * `scale`   — optional per-output-channel fp companion (norm='channel').
+  * `k`/`mode`/`alpha` — static metadata (true contraction length, 'binary'
+                or 'ternary', the fixed Glorot alpha).  Static so a sliced
+                or scanned QTensor keeps its semantics without carrying
+                scalar arrays through tree transforms.
+
+K that is not a multiple of the pack group is zero-padded at pack time; the
+matmul wrapper zero-pads activations to the same boundary, so pad lanes
+contribute exactly 0 regardless of their code values.
+
+`export_packed(params, spec)` deterministically quantizes a trained master
+tree into QTensors per the spec's `QuantPolicy` — the single export path for
+the BN-LSTM, the transformer pool, and the serving kernels.  Consumption is
+`repro.kernels.ops.qmatmul`, which dispatches QTensor operands to the Pallas
+packed kernel and fp operands to `jnp.dot`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantize as Q
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QTensor:
+    """Packed binary/ternary weight (see module docstring)."""
+
+    codes: Array                                   # uint32 (..., ceil(K/G), N)
+    scale: Optional[Array] = dataclasses.field(default=None)
+    k: int = dataclasses.field(default=0, metadata=dict(static=True))
+    mode: str = dataclasses.field(default="ternary", metadata=dict(static=True))
+    alpha: float = dataclasses.field(default=1.0, metadata=dict(static=True))
+
+    # -- metadata ----------------------------------------------------------
+
+    @property
+    def group(self) -> int:
+        return Q.TERNARY_GROUP if self.mode == "ternary" else Q.BINARY_GROUP
+
+    @property
+    def shape(self) -> tuple:
+        """Logical (unpacked) weight shape."""
+        return self.codes.shape[:-2] + (self.k, self.codes.shape[-1])
+
+    @property
+    def ndim(self) -> int:
+        return self.codes.ndim
+
+    @property
+    def nbytes(self) -> int:
+        """Bytes actually stored/streamed for this weight."""
+        n = self.codes.size * self.codes.dtype.itemsize
+        if self.scale is not None:
+            n += self.scale.size * self.scale.dtype.itemsize
+        return n
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def from_master(cls, w: Array, mode: str, alpha: Optional[float] = None,
+                    scale: Optional[Array] = None) -> "QTensor":
+        """Deterministically quantize + pack a trained fp master weight.
+
+        Deterministic (MAP) quantization is the paper's inference variant —
+        Fig. 1b shows the stochastic/deterministic gap is negligible.
+        w: (..., K, N); leading axes are layer-stack / expert dims.
+        """
+        if w.ndim < 2:
+            raise ValueError(f"QTensor needs a matmul weight, got shape {w.shape}")
+        if mode not in ("binary", "ternary"):
+            raise ValueError(f"mode must be 'binary'|'ternary', got {mode!r}")
+        alpha = float(alpha) if alpha is not None else Q.leaf_alpha(w.shape)
+        group = Q.TERNARY_GROUP if mode == "ternary" else Q.BINARY_GROUP
+        *lead, K, N = w.shape
+        wn = jnp.clip(w.astype(jnp.float32) / alpha, -1.0, 1.0)
+        qv = jnp.round(wn) if mode == "ternary" else jnp.where(wn >= 0, 1.0, -1.0)
+        pad = (-K) % group
+        if pad:
+            qv = jnp.pad(qv, [(0, 0)] * len(lead) + [(0, pad), (0, 0)])
+        pack = Q.pack_ternary if mode == "ternary" else Q.pack_binary
+        flat = qv.reshape((-1, K + pad, N))
+        codes = jax.vmap(pack)(flat).reshape(tuple(lead) + ((K + pad) // group, N))
+        return cls(codes=codes, scale=scale, k=K, mode=mode, alpha=alpha)
+
+    # -- dequantization (reference / gather paths) -------------------------
+
+    def dequantize(self, dtype=jnp.float32) -> Array:
+        """Materialize the effective fp weight alpha * values (* scale)."""
+        unpack = Q.unpack_ternary if self.mode == "ternary" else Q.unpack_binary
+        *lead, kg, N = self.codes.shape
+        flat = self.codes.reshape((-1, kg, N))
+        vals = jax.vmap(lambda c: unpack(c, kg * self.group, dtype))(flat)
+        w = vals.reshape(tuple(lead) + (kg * self.group, N))[..., : self.k, :]
+        w = (self.alpha * w).astype(dtype)
+        if self.scale is not None:
+            w = w * self.scale.astype(dtype)
+        return w
+
+
+def is_qtensor(x: Any) -> bool:
+    return isinstance(x, QTensor)
+
+
+def analytic_nbytes(shape, mode: str) -> int:
+    """Serialized size a QTensor of logical `shape` will have (per-matrix
+    packing: leading stack/expert axes each pad their own K groups)."""
+    group = Q.TERNARY_GROUP if mode == "ternary" else Q.BINARY_GROUP
+    *lead, K, N = shape
+    n_mats = int(math.prod(lead)) if lead else 1
+    return n_mats * math.ceil(K / group) * N * 4
+
+
+# ---------------------------------------------------------------------------
+# export: trained master tree -> packed serving tree
+# ---------------------------------------------------------------------------
+
+
+def export_packed(params: Any, spec: Q.QuantSpec, *,
+                  policy: Optional[Q.QuantPolicy] = None) -> Any:
+    """Deterministically quantize every policy-matching leaf into a QTensor.
+
+    The returned tree has the same structure as `params` with quantizable
+    matmul weights replaced by QTensors; everything else (embeddings, norms,
+    biases, routers, BN/scale companions) passes through untouched.  Model
+    code consumes either tree unmodified via `kernels.ops.qmatmul`.
+    """
+    if spec.mode not in ("binary", "ternary"):
+        raise ValueError(
+            f"export_packed needs a binary/ternary spec, got mode={spec.mode!r}")
+    policy = policy if policy is not None else spec.policy()
+
+    def f(path, leaf):
+        if is_qtensor(leaf):
+            return leaf  # already exported
+        if not policy.matches(path, leaf):
+            return leaf
+        # embeddings are consumed by row gather, not matmul — keep them fp
+        # even when the policy would quantize them (the gather is already
+        # MAC-free; see DESIGN.md §3).
+        if Q.path_str(path[-1:]) == "embed":
+            return leaf
+        return QTensor.from_master(leaf, spec.mode, Q.leaf_alpha(leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(f, params, is_leaf=is_qtensor)
+
+
+def tree_nbytes(tree: Any) -> tuple[int, int]:
+    """(fp32-equivalent bytes, actual bytes) over a (possibly packed) tree.
+
+    The first element prices every logical parameter at 4 bytes — the
+    fp32-master footprint the packed tree replaces; the second is what the
+    tree actually stores (QTensor.nbytes for packed leaves)."""
+    fp = real = 0
+    for leaf in jax.tree_util.tree_leaves(tree, is_leaf=is_qtensor):
+        if is_qtensor(leaf):
+            fp += int(math.prod(leaf.shape)) * 4
+            real += leaf.nbytes
+        else:
+            fp += leaf.size * 4
+            real += leaf.size * leaf.dtype.itemsize if hasattr(leaf, "dtype") \
+                else leaf.size * 4
+    return fp, real

@@ -39,6 +39,14 @@ def glorot_alpha(fan_in: int, fan_out: int) -> float:
     return math.sqrt(6.0 / float(fan_in + fan_out))
 
 
+def leaf_alpha(shape) -> float:
+    """Glorot alpha from the matmul dims (last two axes; leading axes are
+    layer-stack / expert dims)."""
+    if len(shape) < 2:
+        return 1.0
+    return glorot_alpha(int(shape[-2]), int(shape[-1]))
+
+
 # ---------------------------------------------------------------------------
 # Straight-through estimator (Eq. 1):  dL/dW  ≈  dL/dW^{B/T}
 # Implemented as an identity-gradient wrapper around an arbitrary
@@ -261,8 +269,66 @@ def packed_nbytes(shape: tuple[int, ...], mode: str) -> int:
 
 
 # ---------------------------------------------------------------------------
-# Quantization spec carried by configs.
+# Quantization spec carried by configs, and the per-leaf policy resolved
+# from it.
 # ---------------------------------------------------------------------------
+
+
+def path_str(path) -> str:
+    """'/'-joined string form of a jax key-path.  The one canonical
+    rendering — policy matching, the quantizer's per-leaf rng fold-in, and
+    export all use it, so a leaf has exactly one name everywhere."""
+    parts = []
+    for p in path:
+        for attr in ("key", "idx", "name"):
+            if hasattr(p, attr):
+                parts.append(str(getattr(p, attr)))
+                break
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """Explicit per-leaf quantization policy (DESIGN.md §3).
+
+    Decides which parameter-tree leaves are *quantizable matmul weights* —
+    the decision formerly hidden in a name-prefix convention.  Patterns are
+    `fnmatch` globs evaluated against the leaf's own key and, when a pattern
+    contains '/', against the full '/'-joined tree path.  Precedence:
+    exclude > extra > include; leaves below `min_ndim` never quantize.
+    """
+
+    include: tuple = ()   # glob patterns of quantizable leaf names
+    exclude: tuple = ()   # glob patterns force-kept full precision
+    extra: tuple = ()     # exact leaf names additionally quantized
+    min_ndim: int = 2     # vectors/scalars (biases, norms) never quantize
+
+    def _hit(self, patterns, name: str, path_str: str) -> bool:
+        from fnmatch import fnmatchcase
+        for pat in patterns:
+            target = path_str if "/" in pat else name
+            if fnmatchcase(target, pat):
+                return True
+        return False
+
+    def matches_name(self, name: str, path_str: Optional[str] = None,
+                     ndim: Optional[int] = None) -> bool:
+        path_str = path_str if path_str is not None else name
+        if ndim is not None and ndim < self.min_ndim:
+            return False
+        if self._hit(self.exclude, name, path_str):
+            return False
+        if name in self.extra:
+            return True
+        return self._hit(self.include, name, path_str)
+
+    def matches(self, path, leaf=None) -> bool:
+        """path: a jax key-path (tuple of DictKey/GetAttrKey/SequenceKey)."""
+        name = path_str(path[-1:]) if path else ""
+        ndim = getattr(leaf, "ndim", None) if leaf is not None else None
+        return self.matches_name(name, path_str(path), ndim)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -278,6 +344,12 @@ class QuantSpec:
     # codes, unpack on-chip).  16x/32x fewer wire bytes than fp32 masters —
     # the paper's memory-bandwidth claim applied to the interconnect.
     packed_comms: bool = False
+    # per-leaf policy knobs: glob patterns over leaf names (see QuantPolicy).
+    # The default mirrors the repo-wide convention (capital-W matmul weights
+    # quantize; embeddings/norms/biases/routers/scale companions stay fp) but
+    # is now explicit, overridable data rather than code.
+    include: tuple = ("W*",)
+    exclude: tuple = ()
 
     @property
     def enabled(self) -> bool:
@@ -287,6 +359,12 @@ class QuantSpec:
     def weight_bits(self) -> float:
         return {"binary": 1, "binaryconnect": 1, "ternary": 2, "twn": 2,
                 "dorefa2": 2, "dorefa3": 3, "dorefa4": 4}.get(self.mode, 32)
+
+    def policy(self) -> QuantPolicy:
+        """Resolve the per-leaf policy this spec implies."""
+        extra = ("embed", "head") if self.quantize_embeddings else ()
+        return QuantPolicy(include=tuple(self.include),
+                           exclude=tuple(self.exclude), extra=extra)
 
 
 def apply_quant(w: Array, spec: QuantSpec, alpha: Array | float, u: Optional[Array]) -> Array:

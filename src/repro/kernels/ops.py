@@ -1,6 +1,11 @@
 """jit'd public wrappers around the Pallas kernels: padding to block
-multiples, alpha scaling, dtype handling, and a serving-oriented
-`PackedLinear` that stores weights packed in HBM."""
+multiples, alpha scaling, dtype handling, and `qmatmul` — the single
+dispatch entry every matmul call site in the model code goes through.
+
+`qmatmul(x, w)` routes a `QTensor` operand (core/qtensor.py) to the Pallas
+packed kernel and an fp operand to `jnp.matmul`, so `rnn_lm_apply`,
+`T.prefill` and `T.decode_step` run unmodified against either a training
+tree or an exported packed tree."""
 from __future__ import annotations
 
 import dataclasses
@@ -10,8 +15,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.quantize import (BINARY_GROUP, TERNARY_GROUP, pack_binary,
-                                 pack_ternary)
+from repro.core.qtensor import QTensor
+from repro.core.quantize import BINARY_GROUP, TERNARY_GROUP
 from repro.kernels import packed_matmul as PK
 
 Array = jax.Array
@@ -70,40 +75,82 @@ def quantize_pack(w: Array, u: Array, alpha, *, mode: str = "ternary",
                             interpret=interpret)
 
 
+# ---------------------------------------------------------------------------
+# qmatmul: the one matmul entry for fp AND packed weights
+# ---------------------------------------------------------------------------
+
+
+def qmatmul(x: Array, w, *, interpret: Optional[bool] = None) -> Array:
+    """y = x @ w for fp `w`, or the Pallas packed matmul for `QTensor` w.
+
+    x: (..., K).  A stacked QTensor (codes (L, ..., K/G, N)) is applied
+    per-matrix: x's leading axes must start with the same L (expert / layer
+    batch), and the L slices run as an unrolled loop (L is small and static —
+    experts per layer — and this keeps us off pallas_call batching rules).
+
+    Output dtype follows x (the activation compute dtype); the packed kernel
+    accumulates in fp32 either way.
+    """
+    if not isinstance(w, QTensor):
+        return x @ w
+    if w.codes.ndim > 2:
+        L = w.codes.shape[0]
+        if x.shape[0] != L:
+            raise ValueError(
+                f"stacked QTensor with {L} matrices needs x batched the same "
+                f"way, got x {x.shape}")
+        sl = lambda i: jax.tree.map(lambda c: c[i], w)
+        return jnp.stack([qmatmul(x[i], sl(i), interpret=interpret)
+                          for i in range(L)])
+    if x.shape[-1] != w.k:
+        raise ValueError(f"qmatmul contraction mismatch: x {x.shape} vs "
+                         f"QTensor k={w.k}")
+    # zero-pad activations to the codes' K coverage: pad lanes multiply
+    # zeros, so pack-time pad codes contribute exactly nothing.
+    kp = w.codes.shape[-2] * w.group
+    if kp != w.k:
+        x_in = _pad_to(x.reshape(-1, w.k), w.group, 1).reshape(
+            x.shape[:-1] + (kp,))
+    else:
+        x_in = x
+    y = packed_matmul(x_in, w.codes, kp, w.alpha, mode=w.mode,
+                      interpret=interpret)
+    if w.scale is not None:
+        y = y * w.scale
+    return y.astype(x.dtype)
+
+
 @dataclasses.dataclass
 class PackedLinear:
-    """Serving-side layer: weights stored packed (2-bit/1-bit) in HBM.
+    """Deprecated shim: a QTensor plus its qmatmul call.  Prefer building
+    QTensors via `core.qtensor.export_packed` and calling `qmatmul`."""
 
-    Built once from trained master weights (deterministic quantization —
-    paper Fig. 1b shows the stochastic/deterministic gap is negligible);
-    every apply streams GROUPx fewer weight bytes than fp32.
-    """
-
-    wp: Array          # (K/G, N) uint32
-    k: int
-    alpha: float
-    mode: str
-    scale: Optional[Array] = None  # channel scale companion (norm='channel')
+    qt: QTensor
 
     @classmethod
     def from_master(cls, w: Array, alpha: float, mode: str,
                     scale: Optional[Array] = None) -> "PackedLinear":
-        wn = jnp.clip(w / alpha, -1.0, 1.0)
-        if mode == "ternary":
-            q = jnp.round(wn)
-            wp = pack_ternary(q)
-        else:
-            q = jnp.where(wn >= 0, 1.0, -1.0)
-            wp = pack_binary(q)
-        return cls(wp=wp, k=w.shape[0], alpha=float(alpha), mode=mode, scale=scale)
+        return cls(QTensor.from_master(w, mode, alpha, scale=scale))
 
     def __call__(self, x: Array, *, interpret: Optional[bool] = None) -> Array:
-        y = packed_matmul(x, self.wp, self.k, self.alpha, mode=self.mode,
-                          interpret=interpret)
-        if self.scale is not None:
-            y = y * self.scale
-        return y.astype(x.dtype)
+        return qmatmul(x, self.qt, interpret=interpret)
+
+    @property
+    def wp(self) -> Array:
+        return self.qt.codes
+
+    @property
+    def k(self) -> int:
+        return self.qt.k
+
+    @property
+    def alpha(self) -> float:
+        return self.qt.alpha
+
+    @property
+    def mode(self) -> str:
+        return self.qt.mode
 
     @property
     def nbytes(self) -> int:
-        return self.wp.size * 4
+        return self.qt.nbytes

@@ -2,9 +2,12 @@
 
   python -m repro.launch.serve --arch qwen3-0.6b --reduced --gen 32 --batch 4
 
-Reports tokens/s and the packed-weight memory footprint (the paper's 16x/32x
-serving story).  On a pod the same entry point runs under the production mesh
-with the decode-time cache shardings from launch/sharding.py.
+With --quant binary|ternary the trained-master tree is exported ONCE into
+packed `QTensor`s (core/qtensor.py) and prefill/decode stream the packed
+codes through the Pallas kernel via `qmatmul` — the reported packed MB is
+the memory the decode loop actually reads, not an analytic estimate.  On a
+pod the same entry point runs under the production mesh with the decode-time
+cache shardings from launch/sharding.py.
 """
 from __future__ import annotations
 
@@ -17,25 +20,16 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
 from repro.configs.shapes import decode_context
-from repro.core.quantize import QuantSpec, packed_nbytes
-from repro.core.qlinear import is_quantizable
+from repro.core.qtensor import export_packed, tree_nbytes
+from repro.core.quantize import QuantSpec
 from repro.models import transformer as T
 from repro.serve.sampler import sample
 
 
-def packed_model_bytes(params, mode: str) -> tuple[int, int]:
-    """(fp32 bytes, packed bytes) over quantizable leaves."""
-    fp = packed_total = 0
-    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
-        last = str(path[-1].key) if hasattr(path[-1], "key") else ""
-        if is_quantizable(last) and leaf.ndim >= 2:
-            fp += leaf.size * 4
-            packed_total += packed_nbytes((int(np.prod(leaf.shape[:-1])),
-                                           leaf.shape[-1]), mode)
-        else:
-            fp += leaf.size * 4
-            packed_total += leaf.size * 4
-    return fp, packed_total
+def packed_model_bytes(qparams) -> tuple[int, int]:
+    """(fp32-equivalent bytes, actual bytes) of an exported serving tree —
+    measured from the real `QTensor.nbytes`, not the analytic formula."""
+    return tree_nbytes(qparams)
 
 
 def main(argv=None):
@@ -62,7 +56,11 @@ def main(argv=None):
     key = jax.random.PRNGKey(args.seed)
     params = T.model_init(key, cfg)
     if args.quant != "none":
-        fp, packed = packed_model_bytes(params, args.quant)
+        # the train->serve handoff: masters -> packed QTensors, once.  The
+        # decode loop below runs against THIS tree, so the printed packed MB
+        # is what the matmuls stream.
+        params = export_packed(params, cfg.quant)
+        fp, packed = packed_model_bytes(params)
         print(f"model bytes: fp32 {fp/1e6:.1f} MB -> packed({args.quant}) "
               f"{packed/1e6:.1f} MB ({fp/packed:.1f}x smaller)")
 

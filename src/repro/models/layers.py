@@ -1,10 +1,12 @@
 """Shared transformer building blocks: RMSNorm, RoPE, chunked GQA attention
 (full / sliding-window / cross), SwiGLU & GeLU MLPs.
 
-All matmul weights follow the 'W*' quantizable naming convention of
-`repro.core.qlinear`; by the time these functions run, the weights may already
-be binary/ternary values produced by `quantize_tree` (the paper's technique) —
-the layer code is agnostic.
+All matmul weights follow the default 'W*' pattern of the QuantPolicy in
+`repro.core.quantize`; by the time these functions run, a weight may be a
+plain fp array, binary/ternary values produced by `quantize_tree` (the
+paper's technique), or an exported packed `QTensor` — every weight matmul
+goes through `kernels.ops.qmatmul`, which dispatches on the operand, so the
+layer code is agnostic.
 
 Attention is query-chunked (a scan over query blocks) so peak logits memory is
 O(chunk x S) instead of O(S x S); sliding-window layers additionally slice the
@@ -20,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.qlinear import maybe_scale, scaled, winit
+from repro.kernels.ops import qmatmul
 from repro.runtime import constrain
 
 Array = jax.Array
@@ -161,7 +164,7 @@ def attn_q(p: dict, x: Array, cfg) -> Array:
     """Query projection only (decode-time cross attention)."""
     hd = cfg.hd
     B, S, _ = x.shape
-    q = scaled(x @ p["Wq"], p, "Wq", cfg.quant).reshape(B, S, cfg.n_heads, hd)
+    q = scaled(qmatmul(x, p["Wq"]), p, "Wq", cfg.quant).reshape(B, S, cfg.n_heads, hd)
     if cfg.qk_norm:
         q = rms_norm(q, p["q_norm"])
     return q
@@ -171,8 +174,8 @@ def attn_kv(p: dict, src: Array, cfg):
     """Key/value projections (cache fill / cross-source encode)."""
     hd = cfg.hd
     B, S, _ = src.shape
-    k = scaled(src @ p["Wk"], p, "Wk", cfg.quant).reshape(B, S, cfg.n_kv, hd)
-    v = scaled(src @ p["Wv"], p, "Wv", cfg.quant).reshape(B, S, cfg.n_kv, hd)
+    k = scaled(qmatmul(src, p["Wk"]), p, "Wk", cfg.quant).reshape(B, S, cfg.n_kv, hd)
+    v = scaled(qmatmul(src, p["Wv"]), p, "Wv", cfg.quant).reshape(B, S, cfg.n_kv, hd)
     if cfg.qk_norm:
         k = rms_norm(k, p["k_norm"])
     return k, v
@@ -189,7 +192,7 @@ def attn_qkv(p: dict, x: Array, cfg, kv_src: Optional[Array] = None):
 def attn_out(p: dict, o: Array, cfg, *, cross: bool = False) -> Array:
     B, S = o.shape[:2]
     o = o.reshape(B, S, cfg.n_heads * cfg.hd)
-    y = scaled(o @ p["Wo"], p, "Wo", cfg.quant)
+    y = scaled(qmatmul(o, p["Wo"]), p, "Wo", cfg.quant)
     if cross and "xgate" in p:
         y = jnp.tanh(p["xgate"]).astype(y.dtype) * y
     return y
@@ -242,12 +245,12 @@ def mlp_init(key, cfg, *, kind: Optional[str] = None) -> dict:
 
 def mlp_apply(p: dict, x: Array, cfg) -> Array:
     if "Wgate" in p:
-        g = scaled(x @ p["Wgate"], p, "Wgate", cfg.quant)
-        u = scaled(x @ p["Wup"], p, "Wup", cfg.quant)
+        g = scaled(qmatmul(x, p["Wgate"]), p, "Wgate", cfg.quant)
+        u = scaled(qmatmul(x, p["Wup"]), p, "Wup", cfg.quant)
         h = jax.nn.silu(g) * u
         h = constrain(h, ("pod", "data"), None, "model")
-        return scaled(h @ p["Wdown"], p, "Wdown", cfg.quant)
-    h = jax.nn.gelu(scaled(x @ p["Wfc1"], p, "Wfc1", cfg.quant)
+        return scaled(qmatmul(h, p["Wdown"]), p, "Wdown", cfg.quant)
+    h = jax.nn.gelu(scaled(qmatmul(x, p["Wfc1"]), p, "Wfc1", cfg.quant)
                     + p["bfc1"].astype(x.dtype))
     h = constrain(h, ("pod", "data"), None, "model")
-    return scaled(h @ p["Wfc2"], p, "Wfc2", cfg.quant) + p["bfc2"].astype(x.dtype)
+    return scaled(qmatmul(h, p["Wfc2"]), p, "Wfc2", cfg.quant) + p["bfc2"].astype(x.dtype)

@@ -21,6 +21,7 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.ops import qmatmul
 from repro.core.qlinear import maybe_scale, scaled, winit
 from repro.runtime import constrain
 
@@ -160,7 +161,7 @@ def mamba2_apply(p: dict, x: Array, cfg, *, state: Optional[SSMState] = None,
     Bsz, S, d = x.shape
     di, H, P, N, conv_dim = _dims(cfg)
 
-    proj = scaled(x @ p["Win"], p, "Win", cfg.quant)
+    proj = scaled(qmatmul(x, p["Win"]), p, "Win", cfg.quant)
     z, xin, Bc, Cc, dt = jnp.split(
         proj, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
@@ -194,7 +195,7 @@ def mamba2_apply(p: dict, x: Array, cfg, *, state: Optional[SSMState] = None,
     g = (g32 * jax.lax.rsqrt(jnp.mean(g32 * g32, axis=-1, keepdims=True) + 1e-6)
          ).astype(x.dtype) * p["norm"].astype(x.dtype)
 
-    out = scaled(g @ p["Wout"], p, "Wout", cfg.quant)
+    out = scaled(qmatmul(g, p["Wout"]), p, "Wout", cfg.quant)
     new_state = None
     if state is not None or decode:
         pos = (state.pos if state is not None else jnp.zeros((), jnp.int32)) + S

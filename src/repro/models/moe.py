@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.qlinear import maybe_scale, scaled, winit
+from repro.core.qtensor import QTensor
+from repro.kernels.ops import qmatmul
 from repro.runtime import constrain, current_mesh
 
 Array = jax.Array
@@ -83,6 +85,18 @@ def route(logits: Array, cfg, cap: int) -> Tuple[Array, Array, Array]:
     return disp, comb, aux
 
 
+def _expert_mm(xe: Array, w) -> Array:
+    """(G, E, C, d) @ per-expert (E, d, f) -> (G, E, C, f), fp or QTensor.
+
+    The fp path keeps the single einsum (one fused contraction, expert axis
+    shardable); a packed QTensor runs per-expert through qmatmul, which
+    unrolls the expert axis over the Pallas kernel."""
+    if isinstance(w, QTensor):
+        xE = jnp.moveaxis(xe, 1, 0)          # (E, G, C, d)
+        return jnp.moveaxis(qmatmul(xE, w), 0, 1)
+    return jnp.einsum("gecd,edf->gecf", xe, w)
+
+
 def moe_apply(p: dict, x: Array, cfg, *, no_drop: bool = False,
               group_size: int = GROUP_SIZE) -> Tuple[Array, Array]:
     """x: (B, S, d) -> (y, aux_loss).  SwiGLU experts, grouped routing."""
@@ -118,13 +132,13 @@ def moe_apply(p: dict, x: Array, cfg, *, no_drop: bool = False,
     xe = jnp.einsum("gtd,gtec->gecd", xt, disp)
     xe = constrain(xe, ("pod", "data"), *espec, None)
 
-    g = jnp.einsum("gecd,edf->gecf", xe, p["Wgate"])
-    u = jnp.einsum("gecd,edf->gecf", xe, p["Wup"])
+    g = _expert_mm(xe, p["Wgate"])
+    u = _expert_mm(xe, p["Wup"])
     g = scaled(g, p, "Wgate", cfg.quant)
     u = scaled(u, p, "Wup", cfg.quant)
     h = jax.nn.silu(g) * u
     h = constrain(h, ("pod", "data"), *espec, None)
-    ye = scaled(jnp.einsum("gecf,efd->gecd", h, p["Wdown"]), p, "Wdown", cfg.quant)
+    ye = scaled(_expert_mm(h, p["Wdown"]), p, "Wdown", cfg.quant)
     ye = constrain(ye, ("pod", "data"), *espec, None)
 
     y = jnp.einsum("gecd,gtec->gtd", ye, comb)

@@ -22,6 +22,7 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.ops import qmatmul
 from repro.core.qlinear import maybe_scale, scaled, winit
 from repro.runtime import constrain
 
@@ -161,10 +162,10 @@ def rwkv6_time_mix(p: dict, x: Array, cfg, *, state: Optional[RWKVState] = None,
     xr, xk, xv, xw, xg = [(x + sx * mix[:, :, i]).astype(x.dtype)
                           for i in range(5)]
 
-    r = scaled(xr @ p["Wr"], p, "Wr", cfg.quant).reshape(B, T, H, N)
-    k = scaled(xk @ p["Wk"], p, "Wk", cfg.quant).reshape(B, T, H, N)
-    v = scaled(xv @ p["Wv"], p, "Wv", cfg.quant).reshape(B, T, H, N)
-    g = jax.nn.silu(scaled(xg @ p["Wg"], p, "Wg", cfg.quant))
+    r = scaled(qmatmul(xr, p["Wr"]), p, "Wr", cfg.quant).reshape(B, T, H, N)
+    k = scaled(qmatmul(xk, p["Wk"]), p, "Wk", cfg.quant).reshape(B, T, H, N)
+    v = scaled(qmatmul(xv, p["Wv"]), p, "Wv", cfg.quant).reshape(B, T, H, N)
+    g = jax.nn.silu(scaled(qmatmul(xg, p["Wg"]), p, "Wg", cfg.quant))
 
     # data-dependent decay: w = exp(-exp(w0 + lora_w(xw))), logw <= 0 (fp32)
     ww = p["w0"] + (jnp.tanh(xw @ p["wA"].astype(x.dtype))
@@ -184,7 +185,7 @@ def rwkv6_time_mix(p: dict, x: Array, cfg, *, state: Optional[RWKVState] = None,
         y, ST = wkv6_chunked(r, k, v, logw, p["u"], cfg.ssm_chunk, S0)
 
     y = _group_norm(y.reshape(B, T, d), p["ln_x"], H) * g
-    out = scaled(y @ p["Wo"], p, "Wo", cfg.quant)
+    out = scaled(qmatmul(y, p["Wo"]), p, "Wo", cfg.quant)
     return out, ST, x[:, -1]
 
 
@@ -196,10 +197,10 @@ def rwkv6_channel_mix(p: dict, x: Array, cfg, *, prev: Optional[Array] = None):
     sx = xprev - x
     xk = x + sx * p["mu_ck"].astype(x.dtype)
     xr = x + sx * p["mu_cr"].astype(x.dtype)
-    k = jnp.square(jax.nn.relu(scaled(xk @ p["Wck"], p, "Wck", cfg.quant)))
+    k = jnp.square(jax.nn.relu(scaled(qmatmul(xk, p["Wck"]), p, "Wck", cfg.quant)))
     k = constrain(k, ("pod", "data"), None, "model")
-    kv = scaled(k @ p["Wcv"], p, "Wcv", cfg.quant)
-    return jax.nn.sigmoid(scaled(xr @ p["Wcr"], p, "Wcr", cfg.quant)) * kv, x[:, -1]
+    kv = scaled(qmatmul(k, p["Wcv"]), p, "Wcv", cfg.quant)
+    return jax.nn.sigmoid(scaled(qmatmul(xr, p["Wcr"]), p, "Wcr", cfg.quant)) * kv, x[:, -1]
 
 
 def rwkv_state_init(cfg, batch: int, dtype=jnp.float32) -> RWKVState:

@@ -12,10 +12,13 @@ pattern unrolled inside the body.  A 100-layer model lowers to ~5 layer bodies
 + a scan, not 100 inlined layers.  KV caches / SSM states are stacked the same
 way and streamed through the scan as xs/ys.
 
-The paper's technique enters exactly once per step: `quantize_tree` maps every
-'W*' leaf (stacked or not) through the stochastic binary/ternary quantizer
-with straight-through gradients (core/qlinear.py).  Everything else here is
-quantization-agnostic.
+The paper's technique enters exactly once per step: `quantize_tree` maps
+every QuantPolicy-matching leaf (stacked or not) through the stochastic
+binary/ternary quantizer with straight-through gradients (core/qlinear.py).
+At serving time the same forward functions accept an `export_packed` tree
+whose weight leaves are packed `QTensor`s — `quantize_tree` passes them
+through and every weight matmul dispatches via `kernels.ops.qmatmul`.
+Everything else here is quantization-agnostic.
 """
 from __future__ import annotations
 
@@ -27,6 +30,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.qlinear import quantize_tree, winit
+from repro.core.qtensor import QTensor
+from repro.kernels.ops import qmatmul
 from repro.models import layers as L
 from repro.models import mamba2 as M
 from repro.models import moe as MOE
@@ -309,8 +314,12 @@ def _embed(params, tokens: Array, cfg) -> Array:
 
 
 def _head(params, x: Array, cfg) -> Array:
-    w = params["embed"].T if cfg.tie_embeddings else params["head"]
-    logits = (x @ w.astype(x.dtype)).astype(jnp.float32)
+    if cfg.tie_embeddings:
+        w = params["embed"].T.astype(x.dtype)  # embed stays fp (gather path)
+    else:
+        w = params["head"]
+        w = w if isinstance(w, QTensor) else w.astype(x.dtype)
+    logits = qmatmul(x, w).astype(jnp.float32)
     if cfg.padded_vocab != cfg.vocab:
         pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab
         logits = jnp.where(pad_mask, logits, -1e30)

@@ -27,6 +27,8 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro.core.qtensor import QTensor, is_qtensor
+
 SEP = "."
 
 
@@ -41,10 +43,25 @@ def _key_str(p) -> str:
 
 
 def _flatten(tree: Any) -> dict:
+    """Flatten to {dotted-path: array}.  QTensor nodes flatten through their
+    registered pytree structure, so an exported packed tree checkpoints as
+    `<leaf>.codes.npy` (+ `<leaf>.scale.npy` when present) with the static
+    k/mode/alpha metadata recorded separately (see `_qtensor_meta`)."""
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         flat[SEP.join(_key_str(p) for p in path)] = leaf
     return flat
+
+
+def _qtensor_meta(tree: Any) -> dict:
+    """{dotted-path: {k, mode, alpha}} for every QTensor node in the tree."""
+    meta = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(
+            tree, is_leaf=is_qtensor)[0]:
+        if is_qtensor(leaf):
+            key = SEP.join(_key_str(p) for p in path)
+            meta[key] = {"k": leaf.k, "mode": leaf.mode, "alpha": leaf.alpha}
+    return meta
 
 
 def save(tree: Any, directory: str | Path, step: int,
@@ -58,7 +75,8 @@ def save(tree: Any, directory: str | Path, step: int,
     shard_dir.mkdir(parents=True, exist_ok=True)
 
     flat = _flatten(tree)
-    manifest = {"step": step, "leaves": {}, "treedef_keys": sorted(flat)}
+    manifest = {"step": step, "leaves": {}, "treedef_keys": sorted(flat),
+                "qtensors": _qtensor_meta(tree)}
     for key, leaf in flat.items():
         arr = np.asarray(jax.device_get(leaf))
         np.save(shard_dir / f"{key}.npy", arr)
@@ -100,6 +118,21 @@ def restore(template: Any, directory: str | Path, step: Optional[int] = None,
             raise FileNotFoundError(f"no checkpoint under {directory}")
     ckpt = directory / f"step_{step:08d}"
     shard_dir = ckpt / f"shard_{process_id:05d}"
+    # validate QTensor metadata: a packed checkpoint only restores into a
+    # template packed the same way (same k / mode / alpha — alpha is
+    # normally derived from the shape, so a drift there is a real
+    # corruption signal, and custom alphas must survive the round trip).
+    manifest = json.loads((ckpt / "manifest.json").read_text())
+    saved_q = manifest.get("qtensors", {})
+    for key, meta in _qtensor_meta(template).items():
+        got = saved_q.get(key)
+        if got is not None and (got["k"] != meta["k"]
+                                or got["mode"] != meta["mode"]
+                                or abs(got["alpha"] - meta["alpha"]) > 1e-9):
+            raise ValueError(
+                f"{key}: checkpoint QTensor (k={got['k']}, mode={got['mode']},"
+                f" alpha={got['alpha']}) != template (k={meta['k']}, "
+                f"mode={meta['mode']}, alpha={meta['alpha']})")
     flat_t = _flatten(template)
     loaded = {}
     for key, leaf in flat_t.items():

@@ -1,0 +1,260 @@
+"""QTensor + export pipeline: the one quantized-weight API train -> serving.
+
+Covers: pack -> qmatmul -> unpack parity vs fp matmul (binary & ternary,
+including K not a multiple of the kernel block so the ops.py padding path is
+exercised), pytree/jit round-trips, the explicit QuantPolicy, export_packed
+for both model families, real-vs-analytic packed bytes, and checkpointing
+packed trees.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import bnlstm as BL
+from repro.core import quantize as Q
+from repro.core.qlinear import is_quantizable, quantize_tree
+from repro.core.qtensor import (QTensor, analytic_nbytes, export_packed,
+                                is_qtensor, tree_nbytes)
+from repro.core.quantize import QuantPolicy, QuantSpec
+from repro.kernels.ops import qmatmul
+from repro.models import transformer as T
+
+
+# --- pack -> qmatmul -> unpack parity ---------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["ternary", "binary"])
+@pytest.mark.parametrize("K", [8, 67, 100, 256])
+def test_qmatmul_matches_fp_matmul(mode, K):
+    """K=67/100 are multiples of neither the pack group nor the kernel block:
+    the zero-pad path in ops.py must contribute exactly nothing."""
+    w = jax.random.normal(jax.random.PRNGKey(K), (K, 40)) * 0.05
+    qt = QTensor.from_master(w, mode)
+    x = jax.random.normal(jax.random.PRNGKey(K + 1), (2, 3, K))
+    y = qmatmul(x, qt)
+    assert y.shape == (2, 3, 40)
+    assert y.dtype == x.dtype
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ qt.dequantize()),
+                               rtol=1e-4, atol=1e-4)
+    # and dequantize itself equals the paper's deterministic quantizer
+    det = (Q.ternarize_deterministic if mode == "ternary"
+           else Q.binarize_deterministic)(w, qt.alpha)
+    np.testing.assert_allclose(np.asarray(qt.dequantize()), np.asarray(det),
+                               atol=1e-6)
+
+
+def test_qmatmul_fp_passthrough_and_mismatch():
+    w = jax.random.normal(jax.random.PRNGKey(0), (16, 8))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16))
+    np.testing.assert_allclose(np.asarray(qmatmul(x, w)), np.asarray(x @ w))
+    qt = QTensor.from_master(w, "ternary")
+    with pytest.raises(ValueError, match="mismatch"):
+        qmatmul(jnp.ones((4, 17)), qt)
+
+
+def test_qmatmul_stacked_per_matrix():
+    """Stacked (experts / scan layers) QTensors apply per matrix."""
+    ws = jax.random.normal(jax.random.PRNGKey(2), (3, 67, 24)) * 0.05
+    qs = QTensor.from_master(ws, "ternary")
+    xs = jax.random.normal(jax.random.PRNGKey(3), (3, 5, 67))
+    y = qmatmul(xs, qs)
+    ref = jnp.einsum("lbk,lkn->lbn", xs, qs.dequantize())
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_qtensor_channel_scale():
+    w = jax.random.normal(jax.random.PRNGKey(4), (32, 16)) * 0.05
+    s = jnp.linspace(0.5, 2.0, 16)
+    qt = QTensor.from_master(w, "ternary", scale=s)
+    x = jax.random.normal(jax.random.PRNGKey(5), (4, 32))
+    base = QTensor.from_master(w, "ternary")
+    np.testing.assert_allclose(np.asarray(qmatmul(x, qt)),
+                               np.asarray(qmatmul(x, base) * s),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --- pytree behavior --------------------------------------------------------
+
+
+def test_qtensor_tree_flatten_jit_roundtrip():
+    w = jax.random.normal(jax.random.PRNGKey(6), (67, 40)) * 0.05
+    qt = QTensor.from_master(w, "ternary")
+    leaves, treedef = jax.tree_util.tree_flatten(qt)
+    assert all(l.dtype == jnp.uint32 for l in leaves)  # codes only, no fp
+    qt2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert (qt2.k, qt2.mode, qt2.alpha) == (qt.k, qt.mode, qt.alpha)
+
+    # QTensor crosses jit boundaries as an argument pytree
+    f = jax.jit(lambda q, x: qmatmul(x, q))
+    x = jax.random.normal(jax.random.PRNGKey(7), (4, 67))
+    np.testing.assert_allclose(np.asarray(f(qt, x)), np.asarray(qmatmul(x, qt)),
+                               rtol=1e-5, atol=1e-5)
+
+    # stacked QTensors slice and scan like the fp tree they replace
+    ws = jax.random.normal(jax.random.PRNGKey(8), (3, 32, 16)) * 0.05
+    qs = QTensor.from_master(ws, "binary")
+    sl = jax.tree.map(lambda l: l[1], qs)
+    assert isinstance(sl, QTensor) and sl.shape == (32, 16) and sl.k == 32
+    xs = jnp.ones((2, 32))
+    _, ys = jax.lax.scan(lambda c, q: (c, qmatmul(xs, q)), 0.0, qs)
+    assert ys.shape == (3, 2, 16)
+
+
+# --- QuantPolicy ------------------------------------------------------------
+
+
+def test_quant_policy_explicit_gating():
+    pol = QuantSpec(mode="ternary").policy()
+    assert pol.matches_name("Wq") and pol.matches_name("Wdown")
+    for name in ("embed", "head", "router", "norm1", "sq", "bn_x", "wA"):
+        assert not pol.matches_name(name)
+    # min_ndim: a 1-D leaf named like a weight still never quantizes
+    assert not pol.matches_name("Wq", ndim=1)
+
+    # quantize_embeddings routes through the policy's extra names
+    pol2 = QuantSpec(mode="ternary", quantize_embeddings=True).policy()
+    assert pol2.matches_name("head") and pol2.matches_name("embed")
+
+    # exclude beats include; custom include patterns work (BN-LSTM names)
+    pol3 = QuantPolicy(include=("wx", "wh"), exclude=("wx",))
+    assert pol3.matches_name("wh") and not pol3.matches_name("wx")
+
+    # path-qualified patterns gate by subtree
+    pol4 = QuantPolicy(include=("W*",), exclude=("enc/*",))
+    assert not pol4.matches_name("Wq", path_str="enc/stack/Wq")
+    assert pol4.matches_name("Wq", path_str="stack/Wq")
+
+    # the legacy name-only helper agrees with the default policy
+    assert is_quantizable("Wq") and not is_quantizable("embed")
+
+
+def test_quantize_tree_honors_policy_exclude():
+    spec = QuantSpec(mode="ternary", stochastic=False, exclude=("Wb",))
+    params = {"Wa": jnp.full((32, 8), 0.3), "Wb": jnp.full((32, 8), 0.3),
+              "bias": jnp.zeros((8,))}
+    out = quantize_tree(params, spec, None)
+    a = Q.leaf_alpha((32, 8))
+    vals = np.unique(np.asarray(out["Wa"]))
+    assert all(np.isclose(v, (-a, 0.0, a), atol=1e-6).any() for v in vals)
+    np.testing.assert_array_equal(np.asarray(out["Wb"]),
+                                  np.asarray(params["Wb"]))
+
+
+# --- export pipeline --------------------------------------------------------
+
+
+def _packed_leaves(tree):
+    return [l for l in jax.tree_util.tree_leaves(tree, is_leaf=is_qtensor)
+            if is_qtensor(l)]
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "mixtral-8x7b"])
+def test_export_packed_transformer_serve_parity(arch):
+    """prefill/decode against the exported packed tree == the fp
+    deterministic-quantization serving path (dense + MoE families)."""
+    cfg = get_config(arch).reduced()
+    cfg = cfg.with_quant(QuantSpec(mode="ternary", norm="channel"))
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    params = T.model_init(jax.random.PRNGKey(0), cfg)
+    qparams = export_packed(params, cfg.quant)
+    assert len(_packed_leaves(qparams)) > 0
+
+    B, S = 2, 16
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    mk = lambda: T.init_caches(cfg, B, S + 4, dtype=jnp.float32)
+
+    c_fp, c_q = mk(), mk()
+    lg_fp, c_fp = T.prefill(params, tokens, c_fp, cfg)
+    lg_q, c_q = T.prefill(qparams, tokens, c_q, cfg)
+    np.testing.assert_allclose(np.asarray(lg_q), np.asarray(lg_fp),
+                               rtol=2e-3, atol=2e-3)
+
+    nxt = jnp.argmax(lg_fp[:, : cfg.vocab], axis=-1).astype(jnp.int32)
+    d_fp, _ = T.decode_step(params, nxt, c_fp, cfg)
+    d_q, _ = T.decode_step(qparams, nxt, c_q, cfg)
+    np.testing.assert_allclose(np.asarray(d_q), np.asarray(d_fp),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_export_packed_rnn_parity():
+    cfg = BL.RNNConfig(vocab=70, d_hidden=48,  # 70, 192: K % group != 0 paths
+                       quant=QuantSpec(mode="ternary", norm="batch"))
+    var = BL.rnn_lm_init(jax.random.PRNGKey(0), cfg)
+    qparams = BL.export_packed_rnn(var["params"], cfg)
+    assert len(_packed_leaves(qparams)) == 2
+    assert not is_qtensor(qparams["head"]["ws"])  # classifier stays fp
+
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab)
+    lg_fp = BL.rnn_lm_apply(var, tokens, cfg, training=False)
+    lg_q = BL.rnn_lm_apply({"params": qparams, "state": var["state"]},
+                           tokens, cfg, training=False)
+    np.testing.assert_allclose(np.asarray(lg_q), np.asarray(lg_fp),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_rnn_mixed_packed_tree_rejected():
+    """A half-exported layer must fail loudly, not serve a raw fp master."""
+    cfg = BL.RNNConfig(vocab=64, d_hidden=32,
+                       quant=QuantSpec(mode="ternary", norm="batch"))
+    var = BL.rnn_lm_init(jax.random.PRNGKey(0), cfg)
+    mixed = export_packed(var["params"], cfg.quant,
+                          policy=QuantPolicy(include=("wh",)))
+    tokens = jnp.zeros((1, 4), jnp.int32)
+    with pytest.raises(ValueError, match="mixed packed/fp"):
+        BL.rnn_lm_apply({"params": mixed, "state": var["state"]},
+                        tokens, cfg, training=False)
+
+
+def test_packed_bytes_real_equals_analytic():
+    """The serving footprint is measured, and the measurement matches the
+    per-matrix analytic size (launch/serve.py prints the measured one)."""
+    from repro.launch.serve import packed_model_bytes
+
+    cfg = get_config("qwen3-1.7b").reduced()
+    cfg = cfg.with_quant(QuantSpec(mode="ternary"))
+    params = T.model_init(jax.random.PRNGKey(0), cfg)
+    qparams = export_packed(params, cfg.quant)
+
+    real = sum(l.nbytes for l in _packed_leaves(qparams))
+    analytic = sum(analytic_nbytes(l.shape, l.mode)
+                   for l in _packed_leaves(qparams))
+    assert real == analytic
+
+    fp_all, packed_all = packed_model_bytes(qparams)
+    fp_leaves = sum(l.size * l.dtype.itemsize
+                    for l in jax.tree_util.tree_leaves(qparams,
+                                                       is_leaf=is_qtensor)
+                    if not is_qtensor(l))
+    assert packed_all == real + fp_leaves
+    assert fp_all > packed_all  # the whole point
+
+
+def test_checkpoint_roundtrip_packed_tree(tmp_path):
+    from repro.train import checkpoint as CK
+
+    cfg = BL.RNNConfig(vocab=64, d_hidden=32,
+                       quant=QuantSpec(mode="ternary", norm="batch"))
+    var = BL.rnn_lm_init(jax.random.PRNGKey(0), cfg)
+    qparams = BL.export_packed_rnn(var["params"], cfg)
+    CK.save(qparams, tmp_path, step=7)
+
+    template = BL.export_packed_rnn(
+        BL.rnn_lm_init(jax.random.PRNGKey(1), cfg)["params"], cfg)
+    restored = CK.restore(template, tmp_path)
+    for got, want in zip(_packed_leaves(restored), _packed_leaves(qparams)):
+        np.testing.assert_array_equal(np.asarray(got.codes),
+                                      np.asarray(want.codes))
+        assert (got.k, got.mode) == (want.k, want.mode)
+
+    # metadata validation: restoring into a differently-packed template fails
+    bad_cfg = dataclasses.replace(cfg, quant=QuantSpec(mode="binary"))
+    bad = BL.export_packed_rnn(
+        BL.rnn_lm_init(jax.random.PRNGKey(1), bad_cfg)["params"], bad_cfg)
+    with pytest.raises(ValueError, match="QTensor"):
+        CK.restore(bad, tmp_path)

@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: skip, not error, when absent
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config
