@@ -43,7 +43,13 @@ def roofline_report(quick=False):
     return rows
 
 
+def _serve_decode(quick=False):
+    from benchmarks.serve_decode import serve_decode
+    return serve_decode(quick=quick)
+
+
 BENCHES = {
+    "serve_decode": _serve_decode,
     "table1_char_lm": T.table1_char_lm,
     "table1b_convergence": T.table1b_convergence,
     "table2_text8": T.table2_text8,

@@ -1,0 +1,80 @@
+"""Serving-loop benchmark: decode tok/s + packed model MB per arch.
+
+Drives the SAME unified recurrent runtime as `launch/serve.py`
+(serve/recurrent.py) — prefill a prompt batch, then a sampled decode loop —
+for the paper's BN-LSTM and one transformer-pool arch, and records the
+measured packed bytes (what the matmuls actually stream) and per-session
+state bytes into results/benchmarks/serve_decode.json so BENCH trajectory
+data accumulates across PRs.
+
+Numbers are CPU-container interpret-mode throughputs at reduced scale: they
+track *relative* regressions of the serving path, not hardware ceilings.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from benchmarks.common import write
+from repro.configs import get_config
+from repro.configs.rnn_paper import char_ptb, reduced
+from repro.core import bnlstm as BL
+from repro.core.qtensor import export_packed
+from repro.core.quantize import QuantSpec
+from repro.models import transformer as T
+from repro.serve.recurrent import (RNNRuntime, TransformerRuntime,
+                                   drive_session, serving_runtime)
+
+
+def _drive(rt, vocab: int, *, batch: int, prompt: int, gen: int, seed: int = 0):
+    """One warmed-up session through the SAME `drive_session` loop the
+    launcher runs; returns the measured row fields.  The untimed warmup pass
+    keeps jit tracing/compilation out of the recorded tok/s."""
+    toks = jax.random.randint(jax.random.PRNGKey(seed), (batch, prompt),
+                              0, vocab)
+    _, m = drive_session(rt, toks, vocab, gen=gen, temperature=0.8, top_k=8,
+                         seed=seed + 1, warmup=True)
+    fp, packed = rt.param_nbytes()
+    return {
+        "prefill_tok_s": round(m["prefill_tok_s"], 1),
+        "decode_tok_s": round(m["decode_tok_s"], 1),
+        "fp32_model_MB": round(fp / 1e6, 3),
+        "packed_model_MB": round(packed / 1e6, 3),
+        "compression_x": round(fp / packed, 2),
+        "state_MB": round(m["state_nbytes"] / 1e6, 3),
+    }
+
+
+def serve_decode(quick: bool = False):
+    gen = 8 if quick else 32
+    prompt = 8 if quick else 16
+    batch = 2 if quick else 4
+    rows = []
+
+    # --- the paper's BN-LSTM, packed ternary, fused decode kernel ----------
+    cfg = reduced(char_ptb())
+    cfg = dataclasses.replace(cfg, quant=QuantSpec(mode="ternary", norm="batch"))
+    var = BL.rnn_lm_init(jax.random.PRNGKey(0), cfg)
+    qvar = {"params": BL.export_packed_rnn(var["params"], cfg),
+            "state": var["state"]}
+    rt = serving_runtime(cfg, qvar)
+    assert isinstance(rt, RNNRuntime)
+    rows.append({"arch": "rnn-paper", "quant": "ternary",
+                 **_drive(rt, cfg.vocab, batch=batch, prompt=prompt, gen=gen)})
+
+    # --- one transformer-pool arch through the same loop -------------------
+    tcfg = get_config("qwen3-0.6b").reduced().with_quant(
+        QuantSpec(mode="ternary", norm="channel"))
+    params = export_packed(T.model_init(jax.random.PRNGKey(0), tcfg), tcfg.quant)
+    trt = serving_runtime(tcfg, params)
+    assert isinstance(trt, TransformerRuntime)
+    rows.append({"arch": "qwen3-0.6b", "quant": "ternary",
+                 **_drive(trt, tcfg.vocab, batch=batch, prompt=prompt,
+                          gen=max(gen // 4, 4))})
+
+    write("serve_decode", rows, meta={"quick": quick,
+                                      "backend": jax.default_backend(),
+                                      "note": "reduced scale, interpret-mode "
+                                              "kernels on CPU"})
+    return rows

@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.core import bnlstm as BL
 from repro.core import quantize as Q
+from repro.core.qtensor import QTensor
 from repro.core.quantize import QuantSpec
 from repro.data.synth import markov_bytes
 from repro.data.text import ByteCorpus
@@ -55,12 +56,12 @@ for i in range(80):
 # --- 3. pack + MAC-free-style matmul ------------------------------------------
 wh = state.params["layers"][0]["wh"]          # trained master weights
 a = Q.glorot_alpha(*wh.shape)
-lin = ops.PackedLinear.from_master(wh, a, "ternary")
+qt = QTensor.from_master(wh, "ternary", a)    # the serving artifact
 x = jax.random.normal(jax.random.PRNGKey(2), (4, wh.shape[0]))
-y_packed = lin(x)
+y_packed = ops.qmatmul(x, qt)                 # Pallas packed kernel
 y_ref = x @ Q.ternarize_deterministic(wh, a)
-print(f"packed weights: {lin.nbytes / 1e3:.1f} KB "
+print(f"packed weights: {qt.nbytes / 1e3:.1f} KB "
       f"(fp32 would be {wh.size * 4 / 1e3:.1f} KB — "
-      f"{wh.size * 4 / lin.nbytes:.0f}x smaller)")
+      f"{wh.size * 4 / qt.nbytes:.0f}x smaller)")
 print("packed-kernel matmul max err vs reference:",
       float(jnp.max(jnp.abs(y_packed - y_ref))))

@@ -9,10 +9,13 @@ The train->deploy handoff the paper is about, on its own model:
    weights for a few steps on a synthetic byte corpus,
 2. `export_packed_rnn` the masters into packed `QTensor`s — 2-bit/1-bit
    codes, the artifact a deployment ships,
-3. generate text running `rnn_lm_apply` UNCHANGED against the packed tree:
-   every recurrent matmul streams uint32 codes through the Pallas packed
-   kernel (interpret mode on CPU) via `kernels.ops.qmatmul`,
-4. verify the packed logits match the deterministic fp quantization path.
+3. generate text STATEFULLY through the unified recurrent runtime
+   (serve/recurrent.py): one `prefill` over the prompt, then one
+   `decode_step` per token — each step a single fused Pallas launch per
+   layer (GEMV against packed codes + BN affine + gates; interpret mode on
+   CPU) with O(1) state instead of re-running the whole sequence,
+4. verify the stepwise decode matches the full-sequence `rnn_lm_apply`
+   against the same packed tree.
 """
 import argparse
 
@@ -24,6 +27,7 @@ from repro.core import bnlstm as BL
 from repro.core.qtensor import is_qtensor, tree_nbytes
 from repro.core.quantize import QuantSpec
 from repro.data.synth import markov_bytes
+from repro.serve.recurrent import RNNRuntime, state_nbytes
 from repro.train.optimizer import OptConfig
 from repro.train.train_step import make_rnn_train_step, train_state_init
 
@@ -68,27 +72,33 @@ def main():
           f"{args.mode} {real/1e3:.0f} KB ({fp/real:.1f}x smaller)")
 
     packed_vars = {"params": qparams, "state": state.bn_state}
-    fp_vars = {"params": state.params, "state": state.bn_state}
 
-    # -- 3. decode against the packed tree -----------------------------------
-    apply_packed = jax.jit(lambda t: BL.rnn_lm_apply(
-        packed_vars, t, cfg, training=False))
-    seq = jnp.asarray(data[: args.seq][None, :])
+    # -- 3. stateful decode against the packed tree ---------------------------
+    # prefill once, then O(1)-state decode steps: each step is the fused
+    # Pallas decode kernel, not a re-run of the growing sequence.
+    rt = RNNRuntime(cfg, packed_vars)
+    prompt = jnp.asarray(data[: args.seq][None, :])
+    st = rt.init_state(batch=1)
+    logits, st = rt.prefill(prompt, st)
+    print(f"session state: {state_nbytes(st) / 1e3:.1f} KB "
+          f"(constant — no KV cache growth)")
     out = []
     for _ in range(args.gen):
-        logits = apply_packed(seq)
-        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(seq.dtype)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         out.append(int(nxt[0]))
-        seq = jnp.concatenate([seq[:, 1:], nxt[:, None]], axis=1)
+        logits, st = rt.decode_step(nxt, st)
     print(f"greedy continuation ids[:16]: {out[:16]}")
 
-    # -- 4. parity: packed serve == deterministic fp quantization ------------
+    # -- 4. parity: stepwise decode == full-sequence forward ------------------
     probe = jnp.asarray(data[1000: 1000 + args.seq][None, :])
-    lg_packed = BL.rnn_lm_apply(packed_vars, probe, cfg, training=False)
-    lg_fp = BL.rnn_lm_apply(fp_vars, probe, cfg, training=False)
-    np.testing.assert_allclose(np.asarray(lg_packed), np.asarray(lg_fp),
+    lg_full = BL.rnn_lm_apply(packed_vars, probe, cfg, training=False)
+    lg_pre, st2 = BL.rnn_prefill(packed_vars, probe[:, :-1], cfg)
+    lg_last, _ = BL.rnn_decode_step(packed_vars, probe[:, -1], cfg, st2)
+    np.testing.assert_allclose(np.asarray(lg_pre), np.asarray(lg_full[:, :-1]),
                                rtol=2e-4, atol=2e-4)
-    print("packed serve matches the fp deterministic-quantization path ✓")
+    np.testing.assert_allclose(np.asarray(lg_last), np.asarray(lg_full[:, -1]),
+                               rtol=2e-4, atol=2e-4)
+    print("stateful prefill/decode matches the full-sequence forward ✓")
     return out
 
 

@@ -20,8 +20,21 @@ _ARCH_MODULES = {
 
 ARCH_IDS = tuple(_ARCH_MODULES)
 
+# The paper's own BN-LSTM arch, servable through the unified recurrent
+# runtime (serve/recurrent.py).  Kept out of ARCH_IDS on purpose: these are
+# RNNConfig, not ModelConfig, and the transformer-pool tests iterate ARCH_IDS.
+RNN_ARCH_IDS = ("rnn-paper",)
+
 
 def get_config(name: str) -> ModelConfig:
     if name not in _ARCH_MODULES:
         raise KeyError(f"unknown arch {name!r}; known: {ARCH_IDS}")
     return import_module(f"repro.configs.{_ARCH_MODULES[name]}").config()
+
+
+def get_rnn_config(name: str):
+    """RNNConfig for a paper arch (full scale; `rnn_paper.reduced` shrinks)."""
+    if name not in RNN_ARCH_IDS:
+        raise KeyError(f"unknown RNN arch {name!r}; known: {RNN_ARCH_IDS}")
+    from repro.configs import rnn_paper
+    return rnn_paper.char_ptb()

@@ -18,7 +18,7 @@ the same code path scales from the CPU tests to the pod-level dry run.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -245,6 +245,192 @@ def rnn_lm_apply(variables: dict, tokens: Array, cfg: RNNConfig, *,
     if return_state:
         return out, new_state
     return out
+
+
+# ---------------------------------------------------------------------------
+# stateful serving: prefill / decode_step against frozen BN statistics
+# (DESIGN.md §6).  At inference every BN is a per-column affine
+#   y = x * (phi * rsqrt(var + eps)) + (gamma - phi * mean * rsqrt(var + eps))
+# so the whole serving forward is gathers, (packed) matmuls, affines and gate
+# nonlinearities — exactly the shape the fused Pallas decode kernel consumes.
+# ---------------------------------------------------------------------------
+
+
+class RNNState(NamedTuple):
+    """Per-session recurrent state: stacked per-layer hidden/cell vectors.
+
+    `c` is carried but unused for GRU cells (kept zeros) so LSTM and GRU share
+    one state layout and the serving runtime never branches on cell type."""
+
+    h: Array    # (n_layers, B, H)
+    c: Array    # (n_layers, B, H)
+    pos: Array  # () int32 — tokens consumed
+
+
+def rnn_state_init(cfg: RNNConfig, batch: int, dtype=None) -> RNNState:
+    dtype = dtype or cfg.dtype
+    z = jnp.zeros((cfg.n_layers, batch, cfg.d_hidden), dtype)
+    return RNNState(h=z, c=z, pos=jnp.zeros((), jnp.int32))
+
+
+def _bn_affine(p: BNParams, s: BNState, eps: float) -> tuple[Array, Array]:
+    """Frozen inference BN as (scale, shift): y = x * scale + shift."""
+    inv = jax.lax.rsqrt(s.var + eps)
+    return p.phi * inv, p.gamma - p.phi * s.mean * inv
+
+
+def rnn_decode_tables(variables: dict, cfg: RNNConfig) -> list:
+    """Per-session serving artifacts, computed ONCE and reused every step.
+
+    Per layer: deterministic/packed weights, the h-side and x-side BN affines,
+    the cell-norm affine, and — for layer 0 — the token gather table with the
+    x-side BN already folded in (`rows_bn`), so serving never dequantizes the
+    embedding rows per call.  When `wh` is a packed QTensor the table also
+    carries gate-aligned codes for the fused Pallas decode-step kernel."""
+    params, bn_state = variables["params"], variables["state"]
+    qw = _quantized_weights(params, cfg, None, training=False)
+    tables = []
+    for l in range(cfg.n_layers):
+        lp, ls = params["layers"][l], bn_state["layers"][l]
+        qx, qh = qw[l]
+        sx, tx = _bn_affine(lp["bn_x"], ls["bn_x"], cfg.eps)
+        sh, th = _bn_affine(lp["bn_h"], ls["bn_h"], cfg.eps)
+        if cfg.cell == "lstm" and cfg.cell_norm:
+            sc, tc = _bn_affine(lp["bn_c"], ls["bn_c"], cfg.eps)
+        else:
+            sc = jnp.ones((cfg.d_hidden,), cfg.dtype)
+            tc = jnp.zeros((cfg.d_hidden,), cfg.dtype)
+        t = {"qh": qh, "b": lp["b"], "scale_h": sh, "shift_h": th,
+             "scale_c": sc, "shift_c": tc}
+        if l == 0:
+            rows = qx.dequantize(cfg.dtype) if is_qtensor(qx) else qx
+            t["rows_bn"] = rows * sx + tx  # gather -> already-BN'd preact
+        else:
+            t["qx"] = qx
+            t["scale_x"], t["shift_x"] = sx, tx
+        if is_qtensor(qh):
+            t["gate_codes"] = OPS.prepare_gate_codes(qh, cfg.n_gates)
+        tables.append(t)
+    return tables
+
+
+def _serve_lstm_step(t: dict, ax: Array, h: Array, c: Array):
+    """ax: (B, 4H) BN'd input-side preact (no bias).  Returns (h', c')."""
+    ah = OPS.qmatmul(h, t["qh"]) * t["scale_h"] + t["shift_h"]
+    f, i, o, g = jnp.split(ax + ah + t["b"], 4, axis=-1)
+    c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    cn = c * t["scale_c"] + t["shift_c"]
+    h = jax.nn.sigmoid(o) * jnp.tanh(cn)
+    return h, c
+
+
+def _serve_gru_step(t: dict, ax: Array, h: Array):
+    """ax: (B, 3H) BN'd input-side preact (no bias).  Returns h'."""
+    ah = OPS.qmatmul(h, t["qh"]) * t["scale_h"] + t["shift_h"]
+    axb = ax + t["b"]
+    H = h.shape[-1]
+    r = jax.nn.sigmoid(axb[..., :H] + ah[..., :H])
+    z = jax.nn.sigmoid(axb[..., H:2 * H] + ah[..., H:2 * H])
+    g = jnp.tanh(axb[..., 2 * H:] + r * ah[..., 2 * H:])
+    return (1.0 - z) * h + z * g
+
+
+def _serve_x_preact(t: dict, l: int, x, dtype):
+    """Input-side BN'd pre-activation: layer 0 gathers the folded row table
+    (token ids in, no matmul); deeper layers project the layer below."""
+    if l == 0:
+        return jnp.take(t["rows_bn"], x, axis=0).astype(dtype)
+    return OPS.qmatmul(x, t["qx"]) * t["scale_x"] + t["shift_x"]
+
+
+def rnn_prefill(variables: dict, tokens: Array, cfg: RNNConfig,
+                state: Optional[RNNState] = None, *,
+                tables: Optional[list] = None):
+    """Run the prompt through the RNN, carrying state across calls.
+
+    tokens: (B, T) int32.  Returns (logits (B, T, vocab), new RNNState) —
+    full-sequence logits so callers can score the prompt; the serving loop
+    samples from `logits[:, -1]`."""
+    params = variables["params"]
+    B, T = tokens.shape
+    if state is None:
+        state = rnn_state_init(cfg, B)
+    if tables is None:
+        tables = rnn_decode_tables(variables, cfg)
+
+    x_seq = tokens
+    hT, cT = [], []
+    for l, t in enumerate(tables):
+        ax_seq = _serve_x_preact(t, l, x_seq, cfg.dtype)  # (B, T, gH)
+        h0 = state.h[l].astype(cfg.dtype)
+        c0 = state.c[l].astype(cfg.dtype)
+        if cfg.cell == "lstm":
+            def step(carry, ax_t):
+                h, c = _serve_lstm_step(t, ax_t, *carry)
+                return (h, c), h
+            (hl, cl), hs = jax.lax.scan(step, (h0, c0),
+                                        jnp.swapaxes(ax_seq, 0, 1))
+        else:
+            def step(h, ax_t):
+                h = _serve_gru_step(t, ax_t, h)
+                return h, h
+            hl, hs = jax.lax.scan(step, h0, jnp.swapaxes(ax_seq, 0, 1))
+            cl = c0
+        x_seq = jnp.swapaxes(hs, 0, 1)
+        hT.append(hl)
+        cT.append(cl)
+
+    logits = OPS.qmatmul(x_seq, params["head"]["ws"]) + params["head"]["bs"]
+    new_state = RNNState(h=jnp.stack(hT), c=jnp.stack(cT),
+                         pos=state.pos + jnp.int32(T))
+    return logits, new_state
+
+
+def rnn_decode_step(variables: dict, tok: Array, cfg: RNNConfig,
+                    state: RNNState, *, tables: Optional[list] = None,
+                    fused: Optional[bool] = None,
+                    interpret: Optional[bool] = None):
+    """One serving step.  tok: (B,) or (B, 1) int32.
+
+    Returns (logits (B, vocab), new RNNState).  With a packed tree the
+    per-layer h-side GEMV + BN affine + bias + gate nonlinearities run as ONE
+    fused Pallas launch (kernels/decode_step.py); `fused=False` forces the
+    unfused qmatmul path (the parity oracle), `fused=True` requires packed
+    weights."""
+    params = variables["params"]
+    if tok.ndim == 2:
+        tok = tok[:, 0]
+    if tables is None:
+        tables = rnn_decode_tables(variables, cfg)
+
+    x = tok
+    hT, cT = [], []
+    for l, t in enumerate(tables):
+        ax = _serve_x_preact(t, l, x, cfg.dtype)
+        h = state.h[l].astype(cfg.dtype)
+        c = state.c[l].astype(cfg.dtype)
+        use_fused = "gate_codes" in t if fused is None else fused
+        if use_fused:
+            if "gate_codes" not in t:
+                raise ValueError("fused decode needs a packed (QTensor) wh; "
+                                 "export the tree or pass fused=False")
+            h, c_new = OPS.fused_rnn_decode_step(
+                h, c if cfg.cell == "lstm" else h, t["gate_codes"],
+                ax + t["b"], t["scale_h"] * t["qh"].alpha, t["shift_h"],
+                t["scale_c"], t["shift_c"], cell=cfg.cell,
+                mode=t["qh"].mode, interpret=interpret)
+            c = c_new if cfg.cell == "lstm" else c
+        elif cfg.cell == "lstm":
+            h, c = _serve_lstm_step(t, ax, h, c)
+        else:
+            h = _serve_gru_step(t, ax, h)
+        hT.append(h)
+        cT.append(c)
+        x = h
+
+    logits = OPS.qmatmul(x, params["head"]["ws"]) + params["head"]["bs"]
+    new_state = RNNState(h=jnp.stack(hT), c=jnp.stack(cT), pos=state.pos + 1)
+    return logits, new_state
 
 
 def lm_loss(variables, tokens, targets, cfg: RNNConfig, *, training, rng=None):

@@ -1,0 +1,132 @@
+"""Fused Pallas decode-step kernel for the BN-LSTM / BN-GRU serving path.
+
+One recurrent serving step against a *packed* recurrent weight is, unfused,
+~6 separate jitted ops: packed GEMV, alpha scale, BN affine, bias add, gate
+split, nonlinearities + cell update.  At decode the GEMV is (1..B, H) — pure
+memory traffic — so every extra launch round-trips the tiny activations
+through HBM.  This kernel does the whole step in ONE launch (DESIGN.md §6):
+
+  * the h-side GEMV against gate-aligned packed codes (2-bit ternary / 1-bit
+    binary, decoded to ±1/0 on the VPU exactly like kernels/packed_matmul.py),
+  * the per-column frozen-BN affine (scale folds the QTensor alpha),
+  * the input-side pre-activation + bias add (`ax`, computed by the caller —
+    for layer 0 it is a single gather of the BN-folded row table),
+  * the gate nonlinearities and hidden/cell update (LSTM or GRU).
+
+Tiling: grid over 128-wide tiles of the gate width H; every gate's code
+block for a tile arrives stacked along a leading gate axis, so the cell
+update has f/i/o/g (or r/z/g) together without cross-tile traffic.  The
+previous hidden vector (the GEMV operand) rides along whole — it is (B, Hp)
+and tiny.  All operands arrive padded from `ops.fused_rnn_decode_step`:
+B to a sublane multiple, H to the 128-lane tile (per gate, so gate
+boundaries stay tile-aligned; pad K lanes multiply zero-padded activations
+and contribute nothing).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.quantize import BINARY_GROUP, TERNARY_GROUP
+from repro.kernels.packed_matmul import (_unpack_binary_tile,
+                                         _unpack_ternary_tile)
+
+Array = jax.Array
+
+BN_TILE = 128  # lane tile over the gate width
+
+
+def _gates(x, codes_ref, ax_ref, scale_ref, shift_ref, hp: int, mode: str,
+           n_gates: int):
+    """Per-gate pre-activations a_i = (x @ W_i) * scale_i + shift_i + ax_i."""
+    unpack = _unpack_ternary_tile if mode == "ternary" else _unpack_binary_tile
+    out = []
+    for i in range(n_gates):
+        w = unpack(codes_ref[i], hp).astype(x.dtype)
+        a = jnp.dot(x, w, preferred_element_type=jnp.float32)
+        out.append(a * scale_ref[i:i + 1, :] + shift_ref[i:i + 1, :]
+                   + ax_ref[:, i, :])
+    return out
+
+
+def _lstm_kernel(x_ref, c_ref, codes_ref, ax_ref, scale_ref, shift_ref,
+                 cs_ref, ct_ref, h_out, c_out, *, hp: int, mode: str):
+    f, i, o, g = _gates(x_ref[...], codes_ref, ax_ref, scale_ref, shift_ref,
+                        hp, mode, 4)
+    c_new = jax.nn.sigmoid(f) * c_ref[...] + jax.nn.sigmoid(i) * jnp.tanh(g)
+    cn = c_new * cs_ref[...] + ct_ref[...]  # cell-norm affine (1s/0s when off)
+    h_out[...] = jax.nn.sigmoid(o) * jnp.tanh(cn)
+    c_out[...] = c_new
+
+
+def _gru_kernel(x_ref, h_ref, codes_ref, ax_ref, scale_ref, shift_ref,
+                h_out, *, hp: int, mode: str):
+    # ax already includes the bias; the h-side BN shift is NOT folded into ax
+    # because r gates the whole normalized ah_g term (core/bnlstm._gru_step).
+    unpack = _unpack_ternary_tile if mode == "ternary" else _unpack_binary_tile
+    x = x_ref[...]
+    ah = []
+    for i in range(3):
+        w = unpack(codes_ref[i], hp).astype(x.dtype)
+        a = jnp.dot(x, w, preferred_element_type=jnp.float32)
+        ah.append(a * scale_ref[i:i + 1, :] + shift_ref[i:i + 1, :])
+    r = jax.nn.sigmoid(ax_ref[:, 0, :] + ah[0])
+    z = jax.nn.sigmoid(ax_ref[:, 1, :] + ah[1])
+    g = jnp.tanh(ax_ref[:, 2, :] + r * ah[2])
+    h_out[...] = (1.0 - z) * h_ref[...] + z * g
+
+
+def fused_decode_step(x: Array, carry: Array, codes: Array, ax: Array,
+                      scale: Array, shift: Array, cscale: Array, cshift: Array,
+                      *, cell: str, mode: str,
+                      interpret: bool | None = None):
+    """Padded-operand entry (see ops.fused_rnn_decode_step for the public API).
+
+    x, carry: (Bp, Hp) fp32; codes: (g, Hp/G, Hp) uint32 gate-aligned;
+    ax: (Bp, g, Hp); scale/shift: (g, Hp); cscale/cshift: (1, Hp).
+    Returns (h', c') fp32 (Bp, Hp) for LSTM, h' alone for GRU.
+    """
+    group = TERNARY_GROUP if mode == "ternary" else BINARY_GROUP
+    g, kg, hp = codes.shape
+    bp = x.shape[0]
+    if hp % BN_TILE or kg * group != hp:
+        raise ValueError(f"codes {codes.shape} must be Hp/{group} x Hp with "
+                         f"Hp % {BN_TILE} == 0")
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    bn = BN_TILE
+    grid = (hp // bn,)
+
+    full = pl.BlockSpec((bp, hp), lambda j: (0, 0))
+    tile = pl.BlockSpec((bp, bn), lambda j: (0, j))
+    cspec = pl.BlockSpec((g, kg, bn), lambda j: (0, 0, j))
+    axspec = pl.BlockSpec((bp, g, bn), lambda j: (0, 0, j))
+    vspec = pl.BlockSpec((g, bn), lambda j: (0, j))
+    rowspec = pl.BlockSpec((1, bn), lambda j: (0, j))
+    oshape = jax.ShapeDtypeStruct((bp, hp), jnp.float32)
+
+    if cell == "lstm":
+        kernel = functools.partial(_lstm_kernel, hp=hp, mode=mode)
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[full, tile, cspec, axspec, vspec, vspec, rowspec,
+                      rowspec],
+            out_specs=(tile, tile),
+            out_shape=(oshape, oshape),
+            interpret=interpret,
+            name=f"{mode}_lstm_decode_step",
+        )(x, carry, codes, ax, scale, shift, cscale, cshift)
+    kernel = functools.partial(_gru_kernel, hp=hp, mode=mode)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[full, tile, cspec, axspec, vspec, vspec],
+        out_specs=tile,
+        out_shape=oshape,
+        interpret=interpret,
+        name=f"{mode}_gru_decode_step",
+    )(x, carry, codes, ax, scale, shift)

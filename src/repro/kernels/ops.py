@@ -8,7 +8,6 @@ packed kernel and an fp operand to `jnp.matmul`, so `rnn_lm_apply`,
 tree or an exported packed tree."""
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import Optional
 
@@ -120,37 +119,74 @@ def qmatmul(x: Array, w, *, interpret: Optional[bool] = None) -> Array:
     return y.astype(x.dtype)
 
 
-@dataclasses.dataclass
-class PackedLinear:
-    """Deprecated shim: a QTensor plus its qmatmul call.  Prefer building
-    QTensors via `core.qtensor.export_packed` and calling `qmatmul`."""
+# ---------------------------------------------------------------------------
+# fused recurrent decode step (kernels/decode_step.py)
+# ---------------------------------------------------------------------------
 
-    qt: QTensor
 
-    @classmethod
-    def from_master(cls, w: Array, alpha: float, mode: str,
-                    scale: Optional[Array] = None) -> "PackedLinear":
-        return cls(QTensor.from_master(w, mode, alpha, scale=scale))
+def prepare_gate_codes(qt: QTensor, n_gates: int) -> Array:
+    """Gate-align a packed recurrent weight for the fused decode kernel.
 
-    def __call__(self, x: Array, *, interpret: Optional[bool] = None) -> Array:
-        return qmatmul(x, self.qt, interpret=interpret)
+    `qt` packs wh (H, n_gates*H).  Each gate's N columns are sliced out,
+    padded to the 128-lane tile Hp (so gate boundaries stay tile-aligned in
+    the kernel), the K code rows are padded to Hp/GROUP, and the gates are
+    stacked: (n_gates, Hp/G, Hp) uint32.  Pad K codes are harmless — the
+    matching activation lanes are zero-padded.  Done ONCE per serving
+    session (serve/recurrent.py caches the result in the decode tables)."""
+    from repro.kernels.decode_step import BN_TILE
 
-    @property
-    def wp(self) -> Array:
-        return self.qt.codes
+    if qt.scale is not None:
+        # the fused kernel folds only alpha * BN-affine into its scale; a
+        # per-channel QTensor scale would be silently dropped
+        raise ValueError("fused decode does not support channel-scaled "
+                         "QTensors (RNN export packs scale-free weights); "
+                         "use the unfused path")
+    kg, N = qt.codes.shape
+    H = N // n_gates
+    if H * n_gates != N or qt.k != H:
+        raise ValueError(f"expected a square-per-gate (H, {n_gates}*H) "
+                         f"recurrent weight, got k={qt.k}, N={N}")
+    hp = -(-max(H, 1) // BN_TILE) * BN_TILE
+    gates = [jnp.pad(qt.codes[:, i * H:(i + 1) * H],
+                     ((0, hp // qt.group - kg), (0, hp - H)))
+             for i in range(n_gates)]
+    return jnp.stack(gates)
 
-    @property
-    def k(self) -> int:
-        return self.qt.k
 
-    @property
-    def alpha(self) -> float:
-        return self.qt.alpha
+def fused_rnn_decode_step(h: Array, carry: Array, gate_codes: Array,
+                          ax: Array, scale: Array, shift: Array,
+                          scale_c: Array, shift_c: Array, *, cell: str,
+                          mode: str, interpret: Optional[bool] = None):
+    """One BN-LSTM/BN-GRU serving step in a single Pallas launch.
 
-    @property
-    def mode(self) -> str:
-        return self.qt.mode
+    h:     (B, H) previous hidden (the GEMV operand).
+    carry: (B, H) previous cell state for LSTM; pass h for GRU.
+    gate_codes: (n_gates, Hp/G, Hp) from `prepare_gate_codes`.
+    ax:    (B, n_gates*H) input-side BN'd pre-activation INCLUDING the bias.
+    scale/shift: (n_gates*H,) frozen h-side BN affine; `scale` must already
+           fold the QTensor alpha (the kernel sees raw ±1/0 codes).
+    scale_c/shift_c: (H,) cell-norm affine (ones/zeros when cell_norm off).
+    Returns (h', c'); c' is the unchanged carry for GRU.
+    """
+    from repro.kernels import decode_step as DK
 
-    @property
-    def nbytes(self) -> int:
-        return self.qt.nbytes
+    g, kg, hp = gate_codes.shape
+    B, H = h.shape
+    bp = -(-max(B, 1) // 8) * 8
+    f32 = jnp.float32
+    pad_m = lambda a: jnp.pad(a.astype(f32),
+                              ((0, bp - a.shape[0]), (0, hp - a.shape[1])))
+    pad_v = lambda a, r: jnp.pad(a.astype(f32).reshape(r, -1),
+                                 ((0, 0), (0, hp - H)))
+    ax3 = jnp.pad(ax.astype(f32).reshape(B, g, H),
+                  ((0, bp - B), (0, 0), (0, hp - H)))
+    args = (pad_m(h), pad_m(carry), gate_codes, ax3,
+            pad_v(scale, g), pad_v(shift, g))
+    if cell == "lstm":
+        hn, cn = DK.fused_decode_step(*args, pad_v(scale_c, 1),
+                                      pad_v(shift_c, 1), cell=cell, mode=mode,
+                                      interpret=interpret)
+        return hn[:B, :H].astype(h.dtype), cn[:B, :H].astype(h.dtype)
+    hn = DK.fused_decode_step(*args, None, None, cell=cell, mode=mode,
+                              interpret=interpret)
+    return hn[:B, :H].astype(h.dtype), carry

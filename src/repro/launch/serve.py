@@ -1,29 +1,34 @@
 """Serving launcher: prefill a prompt batch, decode with sampling.
 
   python -m repro.launch.serve --arch qwen3-0.6b --reduced --gen 32 --batch 4
+  python -m repro.launch.serve --arch rnn-paper --quant ternary
 
-With --quant binary|ternary the trained-master tree is exported ONCE into
-packed `QTensor`s (core/qtensor.py) and prefill/decode stream the packed
-codes through the Pallas kernel via `qmatmul` — the reported packed MB is
-the memory the decode loop actually reads, not an analytic estimate.  On a
-pod the same entry point runs under the production mesh with the decode-time
+Every arch — the transformer pool AND the paper's own BN-LSTM — runs the
+same prefill → sample → decode loop through the unified recurrent runtime
+(serve/recurrent.py).  With --quant binary|ternary the trained-master tree
+is exported ONCE into packed `QTensor`s (core/qtensor.py) and prefill/decode
+stream the packed codes through the Pallas kernels — the reported packed MB
+is the memory the decode loop actually reads, not an analytic estimate.
+For --arch rnn-paper the per-step work is the fused Pallas decode-step
+kernel (kernels/decode_step.py): one launch per layer per token.  On a pod
+the same entry point runs under the production mesh with the decode-time
 cache shardings from launch/sharding.py.
 """
 from __future__ import annotations
 
 import argparse
-import time
+import dataclasses
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.configs import ARCH_IDS, get_config
-from repro.configs.shapes import decode_context
+from repro.configs import (ARCH_IDS, RNN_ARCH_IDS, get_config, get_rnn_config,
+                           rnn_paper)
+from repro.core import bnlstm as BL
 from repro.core.qtensor import export_packed, tree_nbytes
 from repro.core.quantize import QuantSpec
 from repro.models import transformer as T
-from repro.serve.sampler import sample
+from repro.serve.recurrent import (RNNRuntime, TransformerRuntime,
+                                   drive_session)
 
 
 def packed_model_bytes(qparams) -> tuple[int, int]:
@@ -32,9 +37,58 @@ def packed_model_bytes(qparams) -> tuple[int, int]:
     return tree_nbytes(qparams)
 
 
+def _report_bytes(rt, quant: str) -> None:
+    fp, packed = rt.param_nbytes()
+    print(f"model bytes: fp32 {fp/1e6:.1f} MB -> packed({quant}) "
+          f"{packed/1e6:.1f} MB ({fp/packed:.1f}x smaller)")
+
+
+def _build_rnn(args, key):
+    """The paper's BN-LSTM/GRU behind the same serving loop."""
+    cfg = get_rnn_config(args.arch)
+    if args.reduced:
+        cfg = rnn_paper.reduced(cfg)
+    spec = (QuantSpec(mode=args.quant, norm="batch")
+            if args.quant != "none" else QuantSpec(mode="none"))
+    cfg = dataclasses.replace(cfg, quant=spec)
+    var = BL.rnn_lm_init(key, cfg)
+    params = var["params"]
+    if args.quant != "none":
+        params = BL.export_packed_rnn(params, cfg)
+    rt = RNNRuntime(cfg, {"params": params, "state": var["state"]})
+    if args.quant != "none":
+        _report_bytes(rt, args.quant)
+    return cfg, rt
+
+
+def _build_transformer(args, key):
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    cfg = cfg.with_quant(QuantSpec(mode=args.quant, norm="channel")
+                         if args.quant != "none" else QuantSpec(mode="none"))
+    params = T.model_init(key, cfg)
+    if args.quant != "none":
+        # the train->serve handoff: masters -> packed QTensors, once.  The
+        # decode loop below runs against THIS tree, so the printed packed MB
+        # is what the matmuls stream.
+        params = export_packed(params, cfg.quant)
+    B, S = args.batch, args.prompt_len
+    extras = {}
+    if cfg.family == "vlm":
+        extras["img"] = jax.random.normal(key, (B, cfg.n_img_tokens, cfg.d_model))
+    if cfg.family == "audio":
+        extras["enc_frames"] = jax.random.normal(key, (B, S, cfg.d_model))
+    rt = TransformerRuntime(cfg, params, extras=extras)
+    if args.quant != "none":
+        _report_bytes(rt, args.quant)
+    return cfg, rt
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen3-0.6b")
+    ap.add_argument("--arch", choices=ARCH_IDS + RNN_ARCH_IDS,
+                    default="qwen3-0.6b")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
     ap.add_argument("--quant", default="ternary",
@@ -47,59 +101,19 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    cfg = cfg.with_quant(QuantSpec(mode=args.quant, norm="channel")
-                         if args.quant != "none" else QuantSpec(mode="none"))
-
     key = jax.random.PRNGKey(args.seed)
-    params = T.model_init(key, cfg)
-    if args.quant != "none":
-        # the train->serve handoff: masters -> packed QTensors, once.  The
-        # decode loop below runs against THIS tree, so the printed packed MB
-        # is what the matmuls stream.
-        params = export_packed(params, cfg.quant)
-        fp, packed = packed_model_bytes(params)
-        print(f"model bytes: fp32 {fp/1e6:.1f} MB -> packed({args.quant}) "
-              f"{packed/1e6:.1f} MB ({fp/packed:.1f}x smaller)")
+    build = _build_rnn if args.arch in RNN_ARCH_IDS else _build_transformer
+    cfg, rt = build(args, key)
 
     B, S = args.batch, args.prompt_len
-    ctx, src = decode_context(cfg, S + args.gen)
-    extras = {}
-    if cfg.family == "vlm":
-        extras["img"] = jax.random.normal(key, (B, cfg.n_img_tokens, cfg.d_model))
-        src = cfg.n_img_tokens
-    if cfg.family == "audio":
-        extras["enc_frames"] = jax.random.normal(key, (B, S, cfg.d_model))
-
     prompt = jax.random.randint(jax.random.fold_in(key, 1), (B, S), 0, cfg.vocab)
-    caches = T.init_caches(cfg, B, S + args.gen, src_len=src,
-                           dtype=jnp.dtype(cfg.dtype))
-
-    prefill = jax.jit(lambda p, t, c: T.prefill(p, t, c, cfg, **extras))
-    decode = jax.jit(lambda p, t, c: T.decode_step(p, t, c, cfg))
-
-    t0 = time.perf_counter()
-    logits, caches = prefill(params, prompt, caches)
-    logits.block_until_ready()
-    t_prefill = time.perf_counter() - t0
-
-    toks = []
-    skey = jax.random.fold_in(key, 2)
-    t0 = time.perf_counter()
-    for i in range(args.gen):
-        skey, sk = jax.random.split(skey)
-        nxt = sample(logits, sk, temperature=args.temperature,
-                     top_k=args.top_k, vocab=cfg.vocab)
-        toks.append(np.asarray(nxt))
-        logits, caches = decode(params, nxt, caches)
-    jax.block_until_ready(logits)
-    t_decode = time.perf_counter() - t0
-
-    out = np.stack(toks, axis=1)
-    print(f"prefill: {B * S / t_prefill:.0f} tok/s  "
-          f"decode: {B * args.gen / t_decode:.1f} tok/s")
+    out, m = drive_session(rt, prompt, cfg.vocab, gen=args.gen,
+                           temperature=args.temperature, top_k=args.top_k,
+                           seed=args.seed + 1)
+    print(f"session state: {m['state_nbytes']/1e6:.2f} MB "
+          f"({rt.family} family)")
+    print(f"prefill: {m['prefill_tok_s']:.0f} tok/s  "
+          f"decode: {m['decode_tok_s']:.1f} tok/s")
     print(f"generated ids[0,:16]: {out[0, :16].tolist()}")
     return out
 

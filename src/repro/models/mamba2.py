@@ -147,7 +147,10 @@ def ssd_chunked(x: Array, dt: Array, A: Array, Bm: Array, Cm: Array,
 
 def ssd_step(x: Array, dt: Array, A: Array, Bm: Array, Cm: Array, h: Array):
     """Single-token recurrence (decode).  x: (B, H, P), dt: (B, H),
-    Bm/Cm: (B, N), h: (B, H, N, P) -> (y, h')."""
+    Bm/Cm: (B, N), h: (B, H, N, P) -> (y, h').
+
+    This IS the serving decode_step body (serve/recurrent.py): decay, rank-1
+    state update, readout — no sequence axis."""
     dA = jnp.exp(dt * A)                                     # (B, H)
     inc = jnp.einsum("bh,bn,bhp->bhnp", dt, Bm, x)
     h = h * dA[:, :, None, None] + inc
@@ -156,10 +159,15 @@ def ssd_step(x: Array, dt: Array, A: Array, Bm: Array, Cm: Array, h: Array):
 
 
 def mamba2_apply(p: dict, x: Array, cfg, *, state: Optional[SSMState] = None,
-                 decode: bool = False) -> Tuple[Array, Optional[SSMState]]:
-    """x: (B, S, d_model). decode=True expects S == 1 and a state."""
+                 decode: Optional[bool] = None) -> Tuple[Array, Optional[SSMState]]:
+    """x: (B, S, d_model). decode=True expects S == 1 and a state;
+    decode=None auto-selects the `ssd_step` path for a single carried-state
+    token (direct mixer callers; the transformer block driver passes the
+    flag explicitly)."""
     Bsz, S, d = x.shape
     di, H, P, N, conv_dim = _dims(cfg)
+    if decode is None:
+        decode = state is not None and S == 1
 
     proj = scaled(qmatmul(x, p["Win"]), p, "Win", cfg.quant)
     z, xin, Bc, Cc, dt = jnp.split(
@@ -203,10 +211,16 @@ def mamba2_apply(p: dict, x: Array, cfg, *, state: Optional[SSMState] = None,
     return out, new_state
 
 
-def ssm_state_init(cfg, batch: int, dtype=jnp.float32) -> SSMState:
+def state_init(cfg, batch: int, dtype=jnp.float32) -> SSMState:
+    """Zero per-session recurrent state — the unified serving-state entry
+    point (one signature with `rwkv6.state_init` / `bnlstm.rnn_state_init`;
+    serve/recurrent.py and the transformer cache builder both use it)."""
     di, H, P, N, conv_dim = _dims(cfg)
     return SSMState(
         h=jnp.zeros((batch, H, N, P), jnp.float32),  # fp32 recurrent core
         conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
         pos=jnp.zeros((), jnp.int32),
     )
+
+
+ssm_state_init = state_init  # historical name

@@ -125,7 +125,10 @@ def wkv6_chunked(r: Array, k: Array, v: Array, logw: Array, u: Array,
 
 
 def wkv6_step(r, k, v, logw, u, S):
-    """Single token: r,k,v,logw (B,H,N); S (B,H,N,N) fp32 -> (y, S')."""
+    """Single token: r,k,v,logw (B,H,N); S (B,H,N,N) fp32 -> (y, S').
+
+    This IS the serving decode_step body (serve/recurrent.py): one outer
+    product + one state-weighted readout per head, no sequence axis."""
     S = S.astype(jnp.float32)
     kv = jnp.einsum("bhn,bhm->bhnm", k, v).astype(jnp.float32)
     y = jnp.einsum("bhn,bhnm->bhm", r.astype(jnp.float32),
@@ -145,10 +148,16 @@ def _group_norm(x: Array, scale: Array, H: int) -> Array:
 
 
 def rwkv6_time_mix(p: dict, x: Array, cfg, *, state: Optional[RWKVState] = None,
-                   decode: bool = False):
+                   decode: Optional[bool] = None):
+    """decode=None auto-selects for direct mixer callers: a single
+    carried-state token takes the `wkv6_step` recurrence, longer slices the
+    chunked scan.  The transformer block driver passes the flag explicitly
+    (its prefill forces the chunked path even at S=1)."""
     B, T, d = x.shape
     N = cfg.hd
     H = d // N
+    if decode is None:
+        decode = state is not None and T == 1
 
     prev = state.tm_shift if state is not None else jnp.zeros((B, d), x.dtype)
     xprev = jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
@@ -203,7 +212,10 @@ def rwkv6_channel_mix(p: dict, x: Array, cfg, *, prev: Optional[Array] = None):
     return jax.nn.sigmoid(scaled(qmatmul(xr, p["Wcr"]), p, "Wcr", cfg.quant)) * kv, x[:, -1]
 
 
-def rwkv_state_init(cfg, batch: int, dtype=jnp.float32) -> RWKVState:
+def state_init(cfg, batch: int, dtype=jnp.float32) -> RWKVState:
+    """Zero per-session recurrent state — the unified serving-state entry
+    point (one signature with `mamba2.state_init` / `bnlstm.rnn_state_init`;
+    serve/recurrent.py and the transformer cache builder both use it)."""
     d = cfg.d_model
     N = cfg.hd
     H = d // N
@@ -211,3 +223,6 @@ def rwkv_state_init(cfg, batch: int, dtype=jnp.float32) -> RWKVState:
                      tm_shift=jnp.zeros((batch, d), dtype),
                      cm_shift=jnp.zeros((batch, d), dtype),
                      pos=jnp.zeros((), jnp.int32))
+
+
+rwkv_state_init = state_init  # historical name

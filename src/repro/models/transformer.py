@@ -280,9 +280,9 @@ def _kind_cache(cfg, kind: str, batch: int, cap: int, src_len: int, dtype):
                 "cross": CrossCache(k=jnp.zeros((batch, src_len, Hkv, hd), dtype),
                                     v=jnp.zeros((batch, src_len, Hkv, hd), dtype))}
     if kind == "mamba":
-        return {"ssm": M.ssm_state_init(cfg, batch, dtype)}
+        return {"ssm": M.state_init(cfg, batch, dtype)}
     if kind == "rwkv":
-        return {"rwkv": R.rwkv_state_init(cfg, batch, dtype)}
+        return {"rwkv": R.state_init(cfg, batch, dtype)}
     raise ValueError(kind)
 
 

@@ -1,0 +1,172 @@
+"""Unified recurrent serving runtime (DESIGN.md §6).
+
+One stateful prefill/decode interface over every decoder in the repo — the
+paper's BN-LSTM/BN-GRU, RWKV6, Mamba2, and the attention families:
+
+    rt = serving_runtime(cfg, params)          # RNNConfig or ModelConfig
+    state = rt.init_state(batch, context)
+    logits, state = rt.prefill(tokens, state)  # (B, V) last-token logits
+    logits, state = rt.decode_step(tok, state) # tok: (B,) int32
+
+`state` is an opaque pytree the caller threads, never inspects:
+
+  * BN-LSTM/GRU — `bnlstm.RNNState` (stacked per-layer h/c).  The runtime
+    builds the per-session decode tables ONCE (frozen-BN affines, the
+    dequantized+BN-folded layer-0 row table, gate-aligned packed codes) and
+    passes them into the jitted step, so a packed tree decodes through the
+    fused Pallas step kernel with no per-call re-preparation.
+  * transformer pool — the `T.init_caches` pytree.  For RWKV6 / Mamba2
+    layers the cache slots hold `RWKVState` / `SSMState` and the decode step
+    runs `wkv6_step` / `ssd_step`; attention layers hold KV caches in the
+    same slots.  The runtime treats both identically.
+
+The launcher (`launch/serve.py`), the `serve_decode` benchmark and the
+serving tests all drive this interface, so every arch exercises the same
+prefill → sample → decode loop.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bnlstm as BL
+from repro.core.qtensor import tree_nbytes
+from repro.configs.shapes import decode_context
+from repro.models import transformer as T
+from repro.serve.sampler import sample
+
+Array = jax.Array
+
+
+def state_nbytes(state: Any) -> int:
+    """Bytes a session's recurrent state occupies (KV caches / S-matrices /
+    h,c vectors alike) — the per-session memory a serving fleet provisions."""
+    return sum(l.size * l.dtype.itemsize
+               for l in jax.tree_util.tree_leaves(state)
+               if hasattr(l, "dtype"))
+
+
+class RNNRuntime:
+    """BN-LSTM / BN-GRU serving session (core/bnlstm.py serving entry)."""
+
+    family = "rnn"
+
+    def __init__(self, cfg: BL.RNNConfig, variables: dict, *,
+                 interpret: Optional[bool] = None):
+        self.cfg = cfg
+        self.variables = variables
+        # once per session: dequantized layer-0 rows, BN affines, gate codes
+        self.tables = BL.rnn_decode_tables(variables, cfg)
+        def prefill_last(v, tb, toks, st):
+            # slice to the last position INSIDE jit so XLA never materializes
+            # the (B, T, vocab) prompt logits the serving loop discards
+            logits, st = BL.rnn_prefill(v, toks, cfg, st, tables=tb)
+            return logits[:, -1], st
+
+        self._prefill = jax.jit(prefill_last)
+        self._decode = jax.jit(
+            lambda v, tb, tok, st: BL.rnn_decode_step(
+                v, tok, cfg, st, tables=tb, interpret=interpret))
+
+    def init_state(self, batch: int, context: int = 0) -> BL.RNNState:
+        del context  # constant-size state: the RNN's whole point
+        return BL.rnn_state_init(self.cfg, batch)
+
+    def prefill(self, tokens: Array, state: BL.RNNState):
+        return self._prefill(self.variables, self.tables, tokens, state)
+
+    def decode_step(self, tok: Array, state: BL.RNNState):
+        return self._decode(self.variables, self.tables, tok, state)
+
+    def param_nbytes(self) -> tuple[int, int]:
+        return tree_nbytes(self.variables["params"])
+
+
+class TransformerRuntime:
+    """Transformer-pool serving session — includes the recurrent members
+    (rwkv6-7b, zamba2-1.2b), whose decode steps are `wkv6_step`/`ssd_step`
+    carried inside the cache pytree."""
+
+    family = "transformer"
+
+    def __init__(self, cfg, params, *, extras: Optional[dict] = None):
+        self.cfg = cfg
+        self.params = params
+        self.extras = dict(extras or {})
+        self._prefill = jax.jit(
+            lambda p, t, c: T.prefill(p, t, c, cfg, **self.extras))
+        self._decode = jax.jit(lambda p, t, c: T.decode_step(p, t, c, cfg))
+
+    def init_state(self, batch: int, context: int):
+        _, src = decode_context(self.cfg, context)
+        return T.init_caches(self.cfg, batch, context, src_len=src,
+                             dtype=jnp.dtype(self.cfg.dtype))
+
+    def prefill(self, tokens: Array, state):
+        return self._prefill(self.params, tokens, state)
+
+    def decode_step(self, tok: Array, state):
+        return self._decode(self.params, tok, state)
+
+    def param_nbytes(self) -> tuple[int, int]:
+        return tree_nbytes(self.params)
+
+
+def serving_runtime(cfg, params, **kw):
+    """The one constructor: RNNConfig -> RNNRuntime (params is the
+    {'params', 'state'} variables dict), ModelConfig -> TransformerRuntime."""
+    if isinstance(cfg, BL.RNNConfig):
+        return RNNRuntime(cfg, params, **kw)
+    return TransformerRuntime(cfg, params, **kw)
+
+
+def drive_session(rt, prompt: Array, vocab: int, *, gen: int,
+                  temperature: float = 0.8, top_k: int = 0, seed: int = 0,
+                  warmup: bool = False):
+    """The canonical prefill -> sample -> decode session, timed.
+
+    One implementation drives the launcher AND the serve_decode benchmark,
+    so the benchmark measures exactly the loop production runs.  With
+    `warmup` an untimed prefill + decode step runs first, so the recorded
+    tok/s measures the serving path rather than jit tracing/compilation.
+
+    Returns (generated (B, gen) int array, metrics dict with prefill/decode
+    seconds, tok/s, and the per-session state bytes)."""
+    B, S = prompt.shape
+    state = rt.init_state(B, S + gen)
+    if warmup:
+        lg_w, st_w = rt.prefill(prompt, state)
+        nxt_w = sample(lg_w, jax.random.PRNGKey(0), temperature=temperature,
+                       top_k=top_k, vocab=vocab)
+        jax.block_until_ready(rt.decode_step(nxt_w, st_w)[0])
+
+    t0 = time.perf_counter()
+    logits, state = rt.prefill(prompt, state)
+    logits.block_until_ready()
+    t_prefill = time.perf_counter() - t0
+
+    toks = []
+    key = jax.random.PRNGKey(seed)
+    t0 = time.perf_counter()
+    for _ in range(gen):
+        key, sk = jax.random.split(key)
+        nxt = sample(logits, sk, temperature=temperature, top_k=top_k,
+                     vocab=vocab)
+        toks.append(np.asarray(nxt))
+        logits, state = rt.decode_step(nxt, state)
+    jax.block_until_ready(logits)
+    t_decode = time.perf_counter() - t0
+
+    out = np.stack(toks, axis=1)
+    metrics = {
+        "prefill_s": t_prefill,
+        "decode_s": t_decode,
+        "prefill_tok_s": B * S / t_prefill,
+        "decode_tok_s": B * gen / t_decode,
+        "state_nbytes": state_nbytes(state),
+    }
+    return out, metrics

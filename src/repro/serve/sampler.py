@@ -9,13 +9,18 @@ Array = jax.Array
 
 def sample(logits: Array, key: Array, *, temperature: float = 1.0,
            top_k: int = 0, vocab: int = 0) -> Array:
-    """logits: (B, V) -> (B,) int32.  temperature<=0 means greedy."""
+    """logits: (B, V) -> (B,) int32.  temperature<=0 means greedy.
+
+    Masking uses the dtype's own minimum — a hard-coded -1e30 overflows to
+    -inf under bf16/fp16 logits, and a whole row of -inf breaks
+    `jax.random.categorical` (NaN probabilities)."""
+    neg = jnp.finfo(logits.dtype).min
     if vocab and logits.shape[-1] > vocab:
-        logits = jnp.where(jnp.arange(logits.shape[-1]) < vocab, logits, -1e30)
+        logits = jnp.where(jnp.arange(logits.shape[-1]) < vocab, logits, neg)
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits / temperature
     if top_k > 0:
         kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
-        logits = jnp.where(logits >= kth, logits, -1e30)
+        logits = jnp.where(logits >= kth, logits, neg)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -59,19 +59,21 @@ def test_packed_matmul_batched_input():
 
 
 @pytest.mark.parametrize("mode,group", [("ternary", 16), ("binary", 32)])
-def test_packed_linear_end_to_end(mode, group):
-    """PackedLinear == deterministic quantization matmul; 16x/32x bytes."""
+def test_qtensor_qmatmul_end_to_end(mode, group):
+    """qmatmul(x, QTensor) == deterministic quantization matmul; 16x/32x bytes."""
+    from repro.core.qtensor import QTensor
+
     K, N = 512, 256
     w = jax.random.normal(jax.random.PRNGKey(2), (K, N)) * 0.02
     alpha = Q.glorot_alpha(K, N)
-    lin = ops.PackedLinear.from_master(w, alpha, mode)
+    qt = QTensor.from_master(w, mode, alpha)
     x = jax.random.normal(jax.random.PRNGKey(3), (4, K))
-    y = lin(x)
+    y = ops.qmatmul(x, qt)
     qfn = Q.ternarize_deterministic if mode == "ternary" else Q.binarize_deterministic
     y_ref = x @ qfn(w, alpha)
     np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
                                rtol=1e-4, atol=1e-4)
-    assert lin.nbytes == K * N * 4 // group
+    assert qt.nbytes == K * N * 4 // group
 
 
 def test_quantize_pack_fused_equals_two_step():

@@ -1,0 +1,198 @@
+"""Unified recurrent serving runtime (DESIGN.md §6): stateful prefill/decode
+must reproduce the full-sequence forward, the fused Pallas decode-step kernel
+must match the unfused path, and BN-LSTM, RWKV6 and Mamba2 must all serve
+behind the one runtime interface."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import RNN_ARCH_IDS, get_config, get_rnn_config
+from repro.core import bnlstm as BL
+from repro.core.quantize import QuantSpec
+from repro.models import transformer as T
+from repro.serve.recurrent import (RNNRuntime, TransformerRuntime,
+                                   serving_runtime, state_nbytes)
+from repro.serve.sampler import sample
+
+
+def _rnn_cfg(cell, mode="ternary"):
+    return BL.RNNConfig(vocab=24, d_hidden=48, n_layers=2, cell=cell,
+                        quant=QuantSpec(mode=mode, norm="batch"))
+
+
+def _variables(cfg, seed=0):
+    """Init params and RANDOMIZE the BN running stats — zero means / unit
+    vars would let a broken frozen-BN affine fold pass unnoticed."""
+    var = BL.rnn_lm_init(jax.random.PRNGKey(seed), cfg)
+    key = jax.random.PRNGKey(seed + 1)
+    layers = []
+    for i, ls in enumerate(var["state"]["layers"]):
+        d = {}
+        for j, (n, st) in enumerate(sorted(ls.items())):
+            k1, k2 = jax.random.split(jax.random.fold_in(key, 10 * i + j))
+            d[n] = st._replace(
+                mean=0.2 * jax.random.normal(k1, st.mean.shape),
+                var=0.5 + jax.random.uniform(k2, st.var.shape))
+        layers.append(d)
+    return {"params": var["params"], "state": {"layers": layers}}
+
+
+def _packed(var, cfg):
+    return {"params": BL.export_packed_rnn(var["params"], cfg),
+            "state": var["state"]}
+
+
+# --- prefill + N x decode_step == rnn_lm_apply -------------------------------
+
+
+@pytest.mark.parametrize("cell", ["lstm", "gru"])
+@pytest.mark.parametrize("packed", [False, True], ids=["fp", "packed"])
+def test_stepwise_decode_matches_full_forward(cell, packed):
+    cfg = _rnn_cfg(cell)
+    var = _variables(cfg)
+    if packed:
+        var = _packed(var, cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 14), 0, cfg.vocab)
+    full = BL.rnn_lm_apply(var, toks, cfg, training=False)
+
+    lg, st = BL.rnn_prefill(var, toks[:, :7], cfg)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, :7]),
+                               atol=1e-5)
+    assert int(st.pos) == 7
+    for i in range(7):
+        lg, st = BL.rnn_decode_step(var, toks[:, 7 + i], cfg, st)
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, 7 + i]),
+                                   atol=1e-5)
+    assert int(st.pos) == 14
+
+
+def test_prefill_is_resumable():
+    """Two half prompts through prefill == one full prompt (state carries)."""
+    cfg = _rnn_cfg("lstm")
+    var = _packed(_variables(cfg), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 12), 0, cfg.vocab)
+    lg_a, st = BL.rnn_prefill(var, toks[:, :6], cfg)
+    lg_b, st = BL.rnn_prefill(var, toks[:, 6:], cfg, st)
+    full = BL.rnn_lm_apply(var, toks, cfg, training=False)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([lg_a, lg_b], axis=1)),
+        np.asarray(full), atol=1e-5)
+
+
+# --- fused Pallas decode-step kernel -----------------------------------------
+
+
+@pytest.mark.parametrize("cell", ["lstm", "gru"])
+@pytest.mark.parametrize("mode", ["ternary", "binary"])
+def test_fused_decode_step_matches_unfused(cell, mode):
+    cfg = _rnn_cfg(cell, mode)
+    qvar = _packed(_variables(cfg), cfg)
+    tables = BL.rnn_decode_tables(qvar, cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(4), (2, 6), 0, cfg.vocab)
+    st = BL.rnn_state_init(cfg, 2)
+    for i in range(6):
+        lg_f, st_f = BL.rnn_decode_step(qvar, toks[:, i], cfg, st,
+                                        tables=tables, fused=True,
+                                        interpret=True)
+        lg_u, st_u = BL.rnn_decode_step(qvar, toks[:, i], cfg, st,
+                                        tables=tables, fused=False)
+        np.testing.assert_allclose(np.asarray(lg_f), np.asarray(lg_u),
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(st_f.h), np.asarray(st_u.h),
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(st_f.c), np.asarray(st_u.c),
+                                   atol=1e-5)
+        st = st_f  # keep walking the state off zero
+
+
+def test_fused_requires_packed_weights():
+    cfg = _rnn_cfg("lstm")
+    var = _variables(cfg)  # fp masters — no gate codes
+    st = BL.rnn_state_init(cfg, 1)
+    tok = jnp.zeros((1,), jnp.int32)
+    with pytest.raises(ValueError, match="fused decode"):
+        BL.rnn_decode_step(var, tok, cfg, st, fused=True)
+
+
+def test_decode_tables_layer0_rows_are_bn_folded():
+    """The serving table gathers token rows that are ALREADY dequantized and
+    BN-affine-folded — the per-call dequantize is gone."""
+    cfg = _rnn_cfg("lstm")
+    qvar = _packed(_variables(cfg), cfg)
+    tables = BL.rnn_decode_tables(qvar, cfg)
+    assert tables[0]["rows_bn"].shape == (cfg.vocab, 4 * cfg.d_hidden)
+    assert "qx" not in tables[0]          # layer 0 never re-projects
+    assert "gate_codes" in tables[0]       # fused kernel artifact is cached
+    g = tables[0]["gate_codes"]
+    assert g.shape[0] == cfg.n_gates and g.dtype == jnp.uint32
+    assert g.shape[2] % 128 == 0           # gate boundaries tile-aligned
+
+
+# --- the one runtime interface across families -------------------------------
+
+
+def test_rnn_runtime_greedy_decode_is_consistent():
+    """Greedy continuation via the runtime == teacher-forced full forward."""
+    cfg = _rnn_cfg("lstm")
+    qvar = _packed(_variables(cfg), cfg)
+    rt = serving_runtime(cfg, qvar)
+    assert isinstance(rt, RNNRuntime)
+    B, S, n_new = 1, 10, 4
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, S), 0, cfg.vocab)
+    st = rt.init_state(B)
+    logits, st = rt.prefill(toks, st)
+    seq = toks
+    for _ in range(n_new):
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        seq = jnp.concatenate([seq, nxt[:, None]], axis=1)
+        logits, st = rt.decode_step(nxt, st)
+    full = BL.rnn_lm_apply(qvar, seq, cfg, training=False)
+    for i in range(n_new):
+        tf = jnp.argmax(full[:, S - 1 + i], axis=-1)
+        assert int(tf[0]) == int(seq[0, S + i])
+    # constant-size state: the RNN serves any context length in O(1) memory
+    assert state_nbytes(st) == state_nbytes(rt.init_state(B))
+
+
+@pytest.mark.parametrize("arch", ["rwkv6-7b", "zamba2-1.2b"])
+def test_transformer_runtime_recurrent_archs(arch):
+    """RWKV6 / Mamba2 serve behind the SAME interface: their RWKVState /
+    SSMState thread through the runtime's opaque state pytree."""
+    cfg = get_config(arch).reduced()
+    params = T.model_init(jax.random.PRNGKey(0), cfg)
+    rt = serving_runtime(cfg, params)
+    assert isinstance(rt, TransformerRuntime)
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    state = rt.init_state(B, S)
+    lg_pre, state = rt.prefill(toks[:, :-1], state)
+    lg_dec, state = rt.decode_step(toks[:, -1], state)
+    full, _ = T.forward(params, toks, cfg, training=False)
+    np.testing.assert_allclose(np.asarray(lg_pre), np.asarray(full[:, -2]),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(lg_dec), np.asarray(full[:, -1]),
+                               rtol=2e-3, atol=2e-3)
+    assert state_nbytes(state) > 0
+
+
+def test_rnn_arch_registry():
+    cfg = get_rnn_config(RNN_ARCH_IDS[0])
+    assert isinstance(cfg, BL.RNNConfig)
+    with pytest.raises(KeyError):
+        get_rnn_config("not-an-arch")
+
+
+# --- sampler numerics (half-precision logits) --------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float16, jnp.bfloat16])
+def test_sampler_halfprec_masking(dtype):
+    """Masking must use the dtype's own min: -1e30 overflows fp16 to -inf."""
+    logits = jnp.array([[2.0, 1.0, 99.0]], dtype)  # slot 2 is a padded slot
+    for i in range(20):
+        tok = int(sample(logits, jax.random.PRNGKey(i), temperature=0.9,
+                         top_k=2, vocab=2)[0])
+        assert tok in (0, 1)
+    assert int(sample(logits, jax.random.PRNGKey(0), temperature=0.0,
+                      vocab=2)[0]) == 0
