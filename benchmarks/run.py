@@ -48,8 +48,14 @@ def _serve_decode(quick=False):
     return serve_decode(quick=quick)
 
 
+def _serve_engine(quick=False):
+    from benchmarks.serve_engine import serve_engine
+    return serve_engine(quick=quick)
+
+
 BENCHES = {
     "serve_decode": _serve_decode,
+    "serve_engine": _serve_engine,
     "table1_char_lm": T.table1_char_lm,
     "table1b_convergence": T.table1b_convergence,
     "table2_text8": T.table2_text8,

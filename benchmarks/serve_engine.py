@@ -1,0 +1,93 @@
+"""Continuous-batching engine benchmark: aggregate tok/s, occupancy, latency.
+
+Replays a deterministic mixed-length Poisson workload (launch/serve.py's
+`synth_traffic`) through `ServeEngine` for the paper's packed BN-LSTM and
+one transformer-pool arch, and records aggregate decode tok/s, slot
+occupancy %, and p50/p95 per-request latency into
+results/benchmarks/serve_engine.json so the BENCH trajectory accumulates
+across PRs.  The tick-trace count rides along as a regression tripwire for
+the compile-once invariant (it must be 1).
+
+Numbers are CPU-container interpret-mode throughputs at reduced scale: they
+track *relative* regressions of the scheduling path, not hardware ceilings.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from benchmarks.common import write
+from repro.configs import get_config
+from repro.configs.rnn_paper import char_ptb, reduced
+from repro.core import bnlstm as BL
+from repro.core.qtensor import export_packed
+from repro.core.quantize import QuantSpec
+from repro.models import transformer as T
+from repro.serve.engine import ServeEngine
+from repro.serve.recurrent import serving_runtime
+from repro.launch.serve import synth_traffic
+
+
+def _drive(rt, vocab: int, *, slots: int, requests: int, rate: float,
+           prompt: int, gen: int, seed: int = 0) -> dict:
+    ctx = prompt + gen
+    eng = ServeEngine(rt, vocab, slots=slots, max_context=ctx)
+    reqs = synth_traffic(vocab, requests=requests, rate=rate,
+                         prompt_len=prompt, gen=gen, temperature=0.8,
+                         top_k=8, seed=seed)
+    # warm every prefill shape + the tick, so the recorded numbers measure
+    # the serving path rather than XLA compilation
+    eng.warm([np.asarray(r.prompt).size for r in reqs])
+
+    _, m = eng.run(reqs, realtime=True)
+    assert m["tick_traces"] == 1, "occupancy changes retraced the tick"
+    return {
+        "slots": slots,
+        "requests": m["requests"],
+        "agg_tok_s": round(m["agg_tok_s"], 1),
+        "occupancy_pct": round(100 * m["occupancy"], 1),
+        "p50_latency_ms": round(1e3 * m["p50_latency_s"], 1),
+        "p95_latency_ms": round(1e3 * m["p95_latency_s"], 1),
+        "ticks": m["ticks"],
+        "tick_traces": m["tick_traces"],
+    }
+
+
+def serve_engine(quick: bool = False):
+    requests = 6 if quick else 24
+    prompt = 8 if quick else 16
+    gen = 6 if quick else 24
+    slots = 2 if quick else 4
+    rate = 8.0 if quick else 16.0
+    rows = []
+
+    # --- the paper's BN-LSTM, packed ternary, fused decode kernel ----------
+    cfg = reduced(char_ptb())
+    cfg = dataclasses.replace(cfg, quant=QuantSpec(mode="ternary", norm="batch"))
+    var = BL.rnn_lm_init(jax.random.PRNGKey(0), cfg)
+    qvar = {"params": BL.export_packed_rnn(var["params"], cfg),
+            "state": var["state"]}
+    rows.append({"arch": "rnn-paper", "quant": "ternary",
+                 **_drive(serving_runtime(cfg, qvar), cfg.vocab, slots=slots,
+                          requests=requests, rate=rate, prompt=prompt,
+                          gen=gen)})
+
+    # --- one transformer-pool arch under the same scheduler ----------------
+    tcfg = get_config("qwen3-0.6b").reduced().with_quant(
+        QuantSpec(mode="ternary", norm="channel"))
+    params = export_packed(T.model_init(jax.random.PRNGKey(0), tcfg),
+                           tcfg.quant)
+    rows.append({"arch": "qwen3-0.6b", "quant": "ternary",
+                 **_drive(serving_runtime(tcfg, params), tcfg.vocab,
+                          slots=max(slots // 2, 2),
+                          requests=max(requests // 2, 4), rate=rate,
+                          prompt=prompt, gen=max(gen // 2, 4))})
+
+    write("serve_engine", rows, meta={"quick": quick,
+                                      "backend": jax.default_backend(),
+                                      "note": "reduced scale, interpret-mode "
+                                              "kernels on CPU; Poisson "
+                                              "mixed-length traffic replay"})
+    return rows

@@ -264,13 +264,44 @@ class RNNState(NamedTuple):
 
     h: Array    # (n_layers, B, H)
     c: Array    # (n_layers, B, H)
-    pos: Array  # () int32 — tokens consumed
+    pos: Array  # () int32 — tokens consumed; (B,) in a per-slot pool
 
 
-def rnn_state_init(cfg: RNNConfig, batch: int, dtype=None) -> RNNState:
+def rnn_state_init(cfg: RNNConfig, batch: int, dtype=None, *,
+                   per_slot: bool = False) -> RNNState:
+    """`per_slot` gives each batch row its own token counter (B,) — the
+    continuous-batching pool layout, where slots sit at different depths.
+    `pos` is bookkeeping (the recurrence itself is position-free), so both
+    layouts run the identical prefill/decode compute."""
     dtype = dtype or cfg.dtype
     z = jnp.zeros((cfg.n_layers, batch, cfg.d_hidden), dtype)
-    return RNNState(h=z, c=z, pos=jnp.zeros((), jnp.int32))
+    pos = jnp.zeros((batch,) if per_slot else (), jnp.int32)
+    return RNNState(h=z, c=z, pos=pos)
+
+
+def rnn_write_slots(state: RNNState, sub: RNNState, slots) -> RNNState:
+    """Insert a k-sequence state into rows `slots` of a per-slot pool.
+
+    The O(1) recurrent state is the whole trick: admission is two (L, H)
+    row copies per slot, no KV bytes move.  `slots`: scalar or (k,) int;
+    `sub`: batch-k state (its pos may be scalar — a freshly prefilled
+    single request — or (k,))."""
+    slots = jnp.atleast_1d(jnp.asarray(slots, jnp.int32))
+    sub_pos = jnp.broadcast_to(jnp.asarray(sub.pos), slots.shape)
+    return RNNState(h=state.h.at[:, slots].set(sub.h),
+                    c=state.c.at[:, slots].set(sub.c),
+                    pos=state.pos.at[slots].set(sub_pos))
+
+
+def rnn_reset_slots(state: RNNState, mask: Array) -> RNNState:
+    """Retire slots where `mask` (B,) is True: h/c/pos drop to zero.  The
+    pool keeps its shape — dead slots are masked in the decode step, never
+    resliced, so occupancy changes cannot retrace the jitted tick."""
+    m = mask[None, :, None]  # where, not multiply: dead-slot garbage may
+    z = jnp.zeros((), state.h.dtype)  # be non-finite and 0*inf is NaN
+    return RNNState(h=jnp.where(m, z, state.h),
+                    c=jnp.where(m, z, state.c),
+                    pos=jnp.where(mask, 0, state.pos))
 
 
 def _bn_affine(p: BNParams, s: BNState, eps: float) -> tuple[Array, Array]:
@@ -389,6 +420,7 @@ def rnn_prefill(variables: dict, tokens: Array, cfg: RNNConfig,
 def rnn_decode_step(variables: dict, tok: Array, cfg: RNNConfig,
                     state: RNNState, *, tables: Optional[list] = None,
                     fused: Optional[bool] = None,
+                    live: Optional[Array] = None,
                     interpret: Optional[bool] = None):
     """One serving step.  tok: (B,) or (B, 1) int32.
 
@@ -396,7 +428,14 @@ def rnn_decode_step(variables: dict, tok: Array, cfg: RNNConfig,
     per-layer h-side GEMV + BN affine + bias + gate nonlinearities run as ONE
     fused Pallas launch (kernels/decode_step.py); `fused=False` forces the
     unfused qmatmul path (the parity oracle), `fused=True` requires packed
-    weights."""
+    weights.
+
+    `live` (B,) bool freezes dead continuous-batching slots: masked rows
+    keep their h/c (and pos) bit-for-bit while live rows step normally, so
+    the engine runs ONE batched step per tick at fixed shape regardless of
+    occupancy.  The fused kernel applies the mask in-launch; the unfused
+    path selects after the step.  Dead rows' logits are garbage — the
+    engine never samples from them."""
     params = variables["params"]
     if tok.ndim == 2:
         tok = tok[:, 0]
@@ -414,22 +453,26 @@ def rnn_decode_step(variables: dict, tok: Array, cfg: RNNConfig,
             if "gate_codes" not in t:
                 raise ValueError("fused decode needs a packed (QTensor) wh; "
                                  "export the tree or pass fused=False")
-            h, c_new = OPS.fused_rnn_decode_step(
+            hn, c_new = OPS.fused_rnn_decode_step(
                 h, c if cfg.cell == "lstm" else h, t["gate_codes"],
                 ax + t["b"], t["scale_h"] * t["qh"].alpha, t["shift_h"],
                 t["scale_c"], t["shift_c"], cell=cfg.cell,
-                mode=t["qh"].mode, interpret=interpret)
-            c = c_new if cfg.cell == "lstm" else c
+                mode=t["qh"].mode, live=live, interpret=interpret)
+            cn = c_new if cfg.cell == "lstm" else c
         elif cfg.cell == "lstm":
-            h, c = _serve_lstm_step(t, ax, h, c)
+            hn, cn = _serve_lstm_step(t, ax, h, c)
         else:
-            h = _serve_gru_step(t, ax, h)
-        hT.append(h)
-        cT.append(c)
-        x = h
+            hn, cn = _serve_gru_step(t, ax, h), c
+        if live is not None and not use_fused:
+            hn = jnp.where(live[:, None], hn, h)
+            cn = jnp.where(live[:, None], cn, c)
+        hT.append(hn)
+        cT.append(cn)
+        x = hn
 
     logits = OPS.qmatmul(x, params["head"]["ws"]) + params["head"]["bs"]
-    new_state = RNNState(h=jnp.stack(hT), c=jnp.stack(cT), pos=state.pos + 1)
+    step = 1 if live is None else live.astype(state.pos.dtype)
+    new_state = RNNState(h=jnp.stack(hT), c=jnp.stack(cT), pos=state.pos + step)
     return logits, new_state
 
 

@@ -52,18 +52,24 @@ def _gates(x, codes_ref, ax_ref, scale_ref, shift_ref, hp: int, mode: str,
     return out
 
 
-def _lstm_kernel(x_ref, c_ref, codes_ref, ax_ref, scale_ref, shift_ref,
-                 cs_ref, ct_ref, h_out, c_out, *, hp: int, mode: str):
+def _lstm_kernel(x_ref, c_ref, hprev_ref, live_ref, codes_ref, ax_ref,
+                 scale_ref, shift_ref, cs_ref, ct_ref, h_out, c_out,
+                 *, hp: int, mode: str):
     f, i, o, g = _gates(x_ref[...], codes_ref, ax_ref, scale_ref, shift_ref,
                         hp, mode, 4)
     c_new = jax.nn.sigmoid(f) * c_ref[...] + jax.nn.sigmoid(i) * jnp.tanh(g)
     cn = c_new * cs_ref[...] + ct_ref[...]  # cell-norm affine (1s/0s when off)
-    h_out[...] = jax.nn.sigmoid(o) * jnp.tanh(cn)
-    c_out[...] = c_new
+    # continuous batching: dead slots (live == 0) keep h/c bit-for-bit; a
+    # select, not a lerp — dead-row garbage may be non-finite and 0*inf=NaN.
+    # hprev is the same array as x with a TILE spec, so the select needs no
+    # cross-tile reads and the launch shape is occupancy-independent.
+    m = live_ref[...] > 0
+    h_out[...] = jnp.where(m, jax.nn.sigmoid(o) * jnp.tanh(cn), hprev_ref[...])
+    c_out[...] = jnp.where(m, c_new, c_ref[...])
 
 
-def _gru_kernel(x_ref, h_ref, codes_ref, ax_ref, scale_ref, shift_ref,
-                h_out, *, hp: int, mode: str):
+def _gru_kernel(x_ref, h_ref, live_ref, codes_ref, ax_ref, scale_ref,
+                shift_ref, h_out, *, hp: int, mode: str):
     # ax already includes the bias; the h-side BN shift is NOT folded into ax
     # because r gates the whole normalized ah_g term (core/bnlstm._gru_step).
     unpack = _unpack_ternary_tile if mode == "ternary" else _unpack_binary_tile
@@ -76,17 +82,21 @@ def _gru_kernel(x_ref, h_ref, codes_ref, ax_ref, scale_ref, shift_ref,
     r = jax.nn.sigmoid(ax_ref[:, 0, :] + ah[0])
     z = jax.nn.sigmoid(ax_ref[:, 1, :] + ah[1])
     g = jnp.tanh(ax_ref[:, 2, :] + r * ah[2])
-    h_out[...] = (1.0 - z) * h_ref[...] + z * g
+    h_new = (1.0 - z) * h_ref[...] + z * g
+    h_out[...] = jnp.where(live_ref[...] > 0, h_new, h_ref[...])
 
 
 def fused_decode_step(x: Array, carry: Array, codes: Array, ax: Array,
                       scale: Array, shift: Array, cscale: Array, cshift: Array,
-                      *, cell: str, mode: str,
+                      live: Array, *, cell: str, mode: str,
                       interpret: bool | None = None):
     """Padded-operand entry (see ops.fused_rnn_decode_step for the public API).
 
     x, carry: (Bp, Hp) fp32; codes: (g, Hp/G, Hp) uint32 gate-aligned;
-    ax: (Bp, g, Hp); scale/shift: (g, Hp); cscale/cshift: (1, Hp).
+    ax: (Bp, g, Hp); scale/shift: (g, Hp); cscale/cshift: (1, Hp);
+    live: (Bp, Hp) fp32 0/1 row mask (all-ones when every slot is live —
+    the mask is ALWAYS an operand, so masked and unmasked ticks share one
+    launch signature and occupancy changes never relaunch a new shape).
     Returns (h', c') fp32 (Bp, Hp) for LSTM, h' alone for GRU.
     """
     group = TERNARY_GROUP if mode == "ternary" else BINARY_GROUP
@@ -95,6 +105,8 @@ def fused_decode_step(x: Array, carry: Array, codes: Array, ax: Array,
     if hp % BN_TILE or kg * group != hp:
         raise ValueError(f"codes {codes.shape} must be Hp/{group} x Hp with "
                          f"Hp % {BN_TILE} == 0")
+    if live.shape != (bp, hp):
+        raise ValueError(f"live mask {live.shape} must match padded ({bp}, {hp})")
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     bn = BN_TILE
@@ -113,20 +125,22 @@ def fused_decode_step(x: Array, carry: Array, codes: Array, ax: Array,
         return pl.pallas_call(
             kernel,
             grid=grid,
-            in_specs=[full, tile, cspec, axspec, vspec, vspec, rowspec,
-                      rowspec],
+            # x rides along twice: once whole (the GEMV operand) and once
+            # tiled (hprev for the dead-slot select)
+            in_specs=[full, tile, tile, tile, cspec, axspec, vspec, vspec,
+                      rowspec, rowspec],
             out_specs=(tile, tile),
             out_shape=(oshape, oshape),
             interpret=interpret,
             name=f"{mode}_lstm_decode_step",
-        )(x, carry, codes, ax, scale, shift, cscale, cshift)
+        )(x, carry, x, live, codes, ax, scale, shift, cscale, cshift)
     kernel = functools.partial(_gru_kernel, hp=hp, mode=mode)
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[full, tile, cspec, axspec, vspec, vspec],
+        in_specs=[full, tile, tile, cspec, axspec, vspec, vspec],
         out_specs=tile,
         out_shape=oshape,
         interpret=interpret,
         name=f"{mode}_gru_decode_step",
-    )(x, carry, codes, ax, scale, shift)
+    )(x, carry, live, codes, ax, scale, shift)

@@ -156,7 +156,8 @@ def prepare_gate_codes(qt: QTensor, n_gates: int) -> Array:
 def fused_rnn_decode_step(h: Array, carry: Array, gate_codes: Array,
                           ax: Array, scale: Array, shift: Array,
                           scale_c: Array, shift_c: Array, *, cell: str,
-                          mode: str, interpret: Optional[bool] = None):
+                          mode: str, live: Optional[Array] = None,
+                          interpret: Optional[bool] = None):
     """One BN-LSTM/BN-GRU serving step in a single Pallas launch.
 
     h:     (B, H) previous hidden (the GEMV operand).
@@ -166,6 +167,11 @@ def fused_rnn_decode_step(h: Array, carry: Array, gate_codes: Array,
     scale/shift: (n_gates*H,) frozen h-side BN affine; `scale` must already
            fold the QTensor alpha (the kernel sees raw ±1/0 codes).
     scale_c/shift_c: (H,) cell-norm affine (ones/zeros when cell_norm off).
+    live:  optional (B,) bool — continuous-batching occupancy mask; rows
+           where live is False return their h/c unchanged (bit-for-bit).
+           The kernel ALWAYS receives a mask operand (ones when None), so
+           masked and unmasked ticks share one launch signature and
+           occupancy changes never change the launch shape.
     Returns (h', c'); c' is the unchanged carry for GRU.
     """
     from repro.kernels import decode_step as DK
@@ -180,13 +186,17 @@ def fused_rnn_decode_step(h: Array, carry: Array, gate_codes: Array,
                                  ((0, 0), (0, hp - H)))
     ax3 = jnp.pad(ax.astype(f32).reshape(B, g, H),
                   ((0, bp - B), (0, 0), (0, hp - H)))
+    if live is None:
+        live_m = jnp.ones((bp, hp), f32)
+    else:  # pad rows/lanes 0: they select hprev/carry, then get sliced off
+        live_m = pad_m(jnp.broadcast_to(live.astype(f32)[:, None], (B, H)))
     args = (pad_m(h), pad_m(carry), gate_codes, ax3,
             pad_v(scale, g), pad_v(shift, g))
     if cell == "lstm":
         hn, cn = DK.fused_decode_step(*args, pad_v(scale_c, 1),
-                                      pad_v(shift_c, 1), cell=cell, mode=mode,
-                                      interpret=interpret)
+                                      pad_v(shift_c, 1), live_m, cell=cell,
+                                      mode=mode, interpret=interpret)
         return hn[:B, :H].astype(h.dtype), cn[:B, :H].astype(h.dtype)
-    hn = DK.fused_decode_step(*args, None, None, cell=cell, mode=mode,
+    hn = DK.fused_decode_step(*args, None, None, live_m, cell=cell, mode=mode,
                               interpret=interpret)
     return hn[:B, :H].astype(h.dtype), carry

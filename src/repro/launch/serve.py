@@ -2,6 +2,8 @@
 
   python -m repro.launch.serve --arch qwen3-0.6b --reduced --gen 32 --batch 4
   python -m repro.launch.serve --arch rnn-paper --quant ternary
+  python -m repro.launch.serve --arch rnn-paper --traffic --rate 8 \
+      --requests 32 --slots 8
 
 Every arch — the transformer pool AND the paper's own BN-LSTM — runs the
 same prefill → sample → decode loop through the unified recurrent runtime
@@ -13,6 +15,13 @@ For --arch rnn-paper the per-step work is the fused Pallas decode-step
 kernel (kernels/decode_step.py): one launch per layer per token.  On a pod
 the same entry point runs under the production mesh with the decode-time
 cache shardings from launch/sharding.py.
+
+--traffic switches from the lockstep batch to the continuous-batching
+engine (serve/engine.py): a synthetic Poisson workload with mixed prompt
+and generation lengths is replayed against a fixed slot pool, requests are
+admitted as slots free up, and the report is aggregate tok/s, slot
+occupancy and p50/p95 per-request latency — the serving numbers a fleet
+actually provisions against.
 """
 from __future__ import annotations
 
@@ -20,6 +29,7 @@ import argparse
 import dataclasses
 
 import jax
+import numpy as np
 
 from repro.configs import (ARCH_IDS, RNN_ARCH_IDS, get_config, get_rnn_config,
                            rnn_paper)
@@ -27,6 +37,7 @@ from repro.core import bnlstm as BL
 from repro.core.qtensor import export_packed, tree_nbytes
 from repro.core.quantize import QuantSpec
 from repro.models import transformer as T
+from repro.serve.engine import Request, ServeEngine
 from repro.serve.recurrent import (RNNRuntime, TransformerRuntime,
                                    drive_session)
 
@@ -85,6 +96,54 @@ def _build_transformer(args, key):
     return cfg, rt
 
 
+def synth_traffic(vocab: int, *, requests: int, rate: float, prompt_len: int,
+                  gen: int, temperature: float, top_k: int,
+                  seed: int = 0) -> list:
+    """A synthetic mixed-length workload: Poisson arrivals at `rate` req/s,
+    prompt lengths U[1, prompt_len], generation lengths U[1, gen] — the
+    mixed-depth traffic continuous batching exists for.  Deterministic in
+    `seed` so a workload can be replayed across engines / PRs."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / max(rate, 1e-9), size=requests)
+    arrivals = np.cumsum(gaps)
+    reqs = []
+    for i in range(requests):
+        S = int(rng.integers(1, prompt_len + 1))
+        n = int(rng.integers(1, gen + 1))
+        reqs.append(Request(
+            prompt=rng.integers(0, vocab, size=S),
+            max_tokens=n, temperature=temperature, top_k=top_k,
+            seed=seed + 1000 + i, arrival_s=float(arrivals[i]), rid=i))
+    return reqs
+
+
+def run_traffic(cfg, rt, args) -> dict:
+    """Replay a Poisson workload through the continuous-batching engine."""
+    ctx = args.prompt_len + args.gen
+    eng = ServeEngine(rt, cfg.vocab, slots=args.slots, max_context=ctx)
+    reqs = synth_traffic(cfg.vocab, requests=args.requests, rate=args.rate,
+                         prompt_len=args.prompt_len, gen=args.gen,
+                         temperature=args.temperature, top_k=args.top_k,
+                         seed=args.seed)
+    # warm the tick and every distinct prompt-length prefill before the
+    # clock starts, so latency percentiles measure serving, not XLA
+    # compilation (prefill traces per prompt length; the tick never does)
+    eng.warm([np.asarray(r.prompt).size for r in reqs])
+    comps, m = eng.run(reqs, realtime=True)
+    print(f"traffic: {m['requests']} requests over {m['wall_s']:.2f}s "
+          f"({args.rate:.1f} req/s offered, {args.slots} slots)")
+    print(f"aggregate decode: {m['agg_tok_s']:.1f} tok/s  "
+          f"occupancy: {100 * m['occupancy']:.0f}%  "
+          f"ticks: {m['ticks']} (traces: {m['tick_traces']})")
+    print(f"latency: p50 {m['p50_latency_s']*1e3:.0f} ms  "
+          f"p95 {m['p95_latency_s']*1e3:.0f} ms")
+    done = sorted(comps, key=lambda c: c.rid)[:4]
+    for c in done:
+        print(f"  req {c.rid}: prompt {c.prompt_len} -> {len(c.tokens)} toks "
+              f"({c.finished}), latency {c.latency_s*1e3:.0f} ms")
+    return m
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS + RNN_ARCH_IDS,
@@ -99,11 +158,23 @@ def main(argv=None):
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--top-k", type=int, default=40)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--traffic", action="store_true",
+                    help="replay a mixed-length Poisson workload through "
+                         "the continuous-batching ServeEngine")
+    ap.add_argument("--rate", type=float, default=4.0,
+                    help="offered arrival rate, requests/s (--traffic)")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="workload size (--traffic)")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="engine slot-pool size (--traffic)")
     args = ap.parse_args(argv)
 
     key = jax.random.PRNGKey(args.seed)
     build = _build_rnn if args.arch in RNN_ARCH_IDS else _build_transformer
     cfg, rt = build(args, key)
+
+    if args.traffic:
+        return run_traffic(cfg, rt, args)
 
     B, S = args.batch, args.prompt_len
     prompt = jax.random.randint(jax.random.fold_in(key, 1), (B, S), 0, cfg.vocab)

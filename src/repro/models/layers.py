@@ -68,7 +68,9 @@ def _sdpa(q: Array, k: Array, v: Array, q_pos: Array, kv_pos: Array,
           *, causal: bool, window: int, softcap: float = 0.0) -> Array:
     """q: (B, Sq, Hq, hd); k, v: (B, Skv, Hkv, hd) with Hq % Hkv == 0;
     *_pos: (Sq,), (Skv,) absolute positions (kv_pos < 0 marks invalid /
-    unwritten cache slots).
+    unwritten cache slots) — or per-sequence (B, Sq) / (B, Skv) when slots
+    of a continuous-batching pool sit at different depths; the mask then
+    varies over batch instead of broadcasting.
 
     GQA is computed by grouping q heads (einsum over (Hkv, G)) instead of
     materializing repeated K/V — repeating would (a) multiply decode-time KV
@@ -84,12 +86,14 @@ def _sdpa(q: Array, k: Array, v: Array, q_pos: Array, kv_pos: Array,
     logits = logits * scale
     if softcap > 0.0:
         logits = jnp.tanh(logits / softcap) * softcap
-    mask = (kv_pos[None, :] >= 0)
+    qp = q_pos if q_pos.ndim == 2 else q_pos[None]    # (B|1, Sq)
+    kp = kv_pos if kv_pos.ndim == 2 else kv_pos[None]  # (B|1, Skv)
+    mask = (kp[:, None, :] >= 0)
     if causal:
-        mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+        mask = mask & (kp[:, None, :] <= qp[:, :, None])
     if window > 0:
-        mask = mask & (kv_pos[None, :] > q_pos[:, None] - window)
-    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        mask = mask & (kp[:, None, :] > qp[:, :, None] - window)
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
     o = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
     return o.reshape(B, Sq, Hq, hd)
@@ -101,26 +105,38 @@ def attention(q: Array, k: Array, v: Array, *, causal: bool = True,
     """Grouped-query attention with query chunking.
 
     q: (B, Sq, Hq, hd); k, v: (B, Skv, Hkv, hd) with Hq % Hkv == 0.
-    `q_offset` is the absolute position of q[0] (decode: cache length).
-    `kv_pos` gives absolute positions of cache slots (ring buffers); defaults
-    to arange(Skv).
+    `q_offset` is the absolute position of q[0] (decode: cache length) —
+    scalar, or (B,) when a per-slot cache puts every sequence at its own
+    depth.  `kv_pos` gives absolute positions of cache slots (ring buffers);
+    (Skv,) or per-slot (B, Skv); defaults to arange(Skv).
     """
     B, Sq, Hq, hd = q.shape
     Skv, Hkv = k.shape[1], k.shape[2]
     if kv_pos is None:
         kv_pos = jnp.arange(Skv, dtype=jnp.int32)
-    q_pos = q_offset + jnp.arange(Sq, dtype=jnp.int32)
+    off = jnp.asarray(q_offset, jnp.int32)
+    ar = jnp.arange(Sq, dtype=jnp.int32)
+    q_pos = off[:, None] + ar if off.ndim == 1 else off + ar
+    batched = q_pos.ndim == 2 or kv_pos.ndim == 2
 
     if Sq <= chunk or Sq % chunk != 0:
         return _sdpa(q, k, v, q_pos, kv_pos, causal=causal, window=window, softcap=softcap)
 
     n_chunks = Sq // chunk
-    use_slice = window > 0 and Skv > window + chunk and causal
+    # the sliding-window KV slice needs one scalar start per chunk, so it
+    # stays off when positions are per-row; query chunking itself is
+    # row-independent and still bounds logits memory for a long
+    # prefill-into-slot (admission prefills are B=1 but Sq can be the
+    # whole prompt)
+    use_slice = window > 0 and Skv > window + chunk and causal and not batched
     kv_span = window + chunk if use_slice else Skv
 
     def one(i):
         qi = jax.lax.dynamic_slice_in_dim(q, i * chunk, chunk, axis=1)
-        qp = q_pos[0] + i * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        if q_pos.ndim == 2:
+            qp = jax.lax.dynamic_slice_in_dim(q_pos, i * chunk, chunk, axis=1)
+        else:
+            qp = q_pos[0] + i * chunk + jnp.arange(chunk, dtype=jnp.int32)
         if use_slice:
             start = jnp.clip(q_offset + i * chunk - window + 1, 0, Skv - kv_span)
             ki = jax.lax.dynamic_slice_in_dim(k, start, kv_span, axis=1)

@@ -211,15 +211,19 @@ def mamba2_apply(p: dict, x: Array, cfg, *, state: Optional[SSMState] = None,
     return out, new_state
 
 
-def state_init(cfg, batch: int, dtype=jnp.float32) -> SSMState:
+def state_init(cfg, batch: int, dtype=jnp.float32, *,
+               per_slot: bool = False) -> SSMState:
     """Zero per-session recurrent state — the unified serving-state entry
     point (one signature with `rwkv6.state_init` / `bnlstm.rnn_state_init`;
-    serve/recurrent.py and the transformer cache builder both use it)."""
+    serve/recurrent.py and the transformer cache builder both use it).
+    `per_slot` makes the token counter (B,) so every continuous-batching
+    slot tracks its own depth; `pos` is bookkeeping, not compute, so the
+    SSD recurrence is unchanged either way."""
     di, H, P, N, conv_dim = _dims(cfg)
     return SSMState(
         h=jnp.zeros((batch, H, N, P), jnp.float32),  # fp32 recurrent core
         conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
-        pos=jnp.zeros((), jnp.int32),
+        pos=jnp.zeros((batch,) if per_slot else (), jnp.int32),
     )
 
 

@@ -212,17 +212,21 @@ def rwkv6_channel_mix(p: dict, x: Array, cfg, *, prev: Optional[Array] = None):
     return jax.nn.sigmoid(scaled(qmatmul(xr, p["Wcr"]), p, "Wcr", cfg.quant)) * kv, x[:, -1]
 
 
-def state_init(cfg, batch: int, dtype=jnp.float32) -> RWKVState:
+def state_init(cfg, batch: int, dtype=jnp.float32, *,
+               per_slot: bool = False) -> RWKVState:
     """Zero per-session recurrent state — the unified serving-state entry
     point (one signature with `mamba2.state_init` / `bnlstm.rnn_state_init`;
-    serve/recurrent.py and the transformer cache builder both use it)."""
+    serve/recurrent.py and the transformer cache builder both use it).
+    `per_slot` makes the token counter (B,) so every continuous-batching
+    slot tracks its own depth; `pos` is bookkeeping, not compute, so the
+    wkv recurrence is unchanged either way."""
     d = cfg.d_model
     N = cfg.hd
     H = d // N
     return RWKVState(S=jnp.zeros((batch, H, N, N), jnp.float32),  # fp32 core
                      tm_shift=jnp.zeros((batch, d), dtype),
                      cm_shift=jnp.zeros((batch, d), dtype),
-                     pos=jnp.zeros((), jnp.int32))
+                     pos=jnp.zeros((batch,) if per_slot else (), jnp.int32))
 
 
 rwkv_state_init = state_init  # historical name

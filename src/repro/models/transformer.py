@@ -187,7 +187,10 @@ def _self_attn_cached(p_attn, h, cfg, cache: AttnCache, *, window: int):
     q = L.attn_q(p_attn, h, cfg)
     k_new, v_new = L.attn_kv(p_attn, h, cfg)
     S = h.shape[1]
-    positions = cache.pos + jnp.arange(S, dtype=jnp.int32)
+    # scalar pos -> (S,); per-slot pos (B,) -> (B, S) (every slot of a
+    # continuous-batching pool RoPEs/masks at its own sequence depth)
+    ar = jnp.arange(S, dtype=jnp.int32)
+    positions = cache.pos[:, None] + ar if cache.pos.ndim else cache.pos + ar
     q = L.rope(q, positions, cfg.rope_theta)
     k_new = L.rope(k_new, positions, cfg.rope_theta)
     cache = cache_update(cache, k_new, v_new)
@@ -263,43 +266,50 @@ def _rwkv_block(p, x, cfg, state: Optional[R.RWKVState], decode):
 # ---------------------------------------------------------------------------
 
 
-def _kind_cache(cfg, kind: str, batch: int, cap: int, src_len: int, dtype):
+def _kind_cache(cfg, kind: str, batch: int, cap: int, src_len: int, dtype,
+                per_slot: bool = False):
     """Cache pytree for one layer of `kind` (python structure, zero arrays)."""
     Hkv, hd = cfg.n_kv, cfg.hd
     if kind in ("full", "global", "self", "shared"):
         c = cap if not cfg.swa_all else min(cfg.window + DECODE_MARGIN, cap)
-        return {"attn": cache_init(batch, c, Hkv, hd, dtype, ring=cfg.swa_all)}
+        return {"attn": cache_init(batch, c, Hkv, hd, dtype, ring=cfg.swa_all,
+                                   per_slot=per_slot)}
     if kind == "local":
         w = min(cfg.window + DECODE_MARGIN, cap)
-        return {"attn": cache_init(batch, w, Hkv, hd, dtype, ring=True)}
+        return {"attn": cache_init(batch, w, Hkv, hd, dtype, ring=True,
+                                   per_slot=per_slot)}
     if kind == "cross":
         return {"cross": CrossCache(k=jnp.zeros((batch, src_len, Hkv, hd), dtype),
                                     v=jnp.zeros((batch, src_len, Hkv, hd), dtype))}
     if kind == "selfcross":
-        return {"attn": cache_init(batch, cap, Hkv, hd, dtype),
+        return {"attn": cache_init(batch, cap, Hkv, hd, dtype,
+                                   per_slot=per_slot),
                 "cross": CrossCache(k=jnp.zeros((batch, src_len, Hkv, hd), dtype),
                                     v=jnp.zeros((batch, src_len, Hkv, hd), dtype))}
     if kind == "mamba":
-        return {"ssm": M.state_init(cfg, batch, dtype)}
+        return {"ssm": M.state_init(cfg, batch, dtype, per_slot=per_slot)}
     if kind == "rwkv":
-        return {"rwkv": R.state_init(cfg, batch, dtype)}
+        return {"rwkv": R.state_init(cfg, batch, dtype, per_slot=per_slot)}
     raise ValueError(kind)
 
 
 def init_caches(cfg, batch: int, context: int, *, src_len: int = 0,
-                dtype=None) -> dict:
-    """Stacked cache pytree matching the scan structure."""
+                dtype=None, per_slot: bool = False) -> dict:
+    """Stacked cache pytree matching the scan structure.  With `per_slot`
+    every position counter is per-sequence (B,) so batch rows can sit at
+    different depths — the continuous-batching pool layout (DESIGN.md §7)."""
     dtype = dtype or _dt(cfg)
     cap = context + DECODE_MARGIN
     pat, rep, tail = expand_pattern(cfg)
 
     def stack(kind):
-        one = _kind_cache(cfg, kind, batch, cap, src_len, dtype)
+        one = _kind_cache(cfg, kind, batch, cap, src_len, dtype, per_slot)
         return jax.tree.map(lambda a: jnp.broadcast_to(a, (rep,) + a.shape), one)
 
     return {
         "stack": tuple(stack(k) for k in pat),
-        "tail": tuple(_kind_cache(cfg, k, batch, cap, src_len, dtype) for k in tail),
+        "tail": tuple(_kind_cache(cfg, k, batch, cap, src_len, dtype, per_slot)
+                      for k in tail),
     }
 
 

@@ -1,0 +1,362 @@
+"""Continuous-batching serve engine (DESIGN.md §7).
+
+`ServeEngine` owns a fixed pool of B slots over any serving runtime
+(BN-LSTM/GRU, RWKV6, Mamba2-hybrid, attention archs) and turns the lockstep
+prefill→decode loop into mixed-length traffic serving:
+
+  * requests are ADMITTED from a queue as slots free up: the new request is
+    prefilled alone (batch 1, pool-shaped state) and spliced into its slot —
+    for the RNN family that is two (L, H) row copies (the O(1) recurrent
+    state is exactly what makes admission trivial), for attention archs a
+    per-slot KV-row insert plus a per-slot position reset;
+  * every tick runs ONE batched `decode_step` across all B slots with dead
+    slots MASKED, never resliced — the tick's operand shapes are
+    occupancy-independent, so jit traces the decode path exactly once and
+    admit/retire between ticks cannot retrace it (asserted in tests);
+  * slots RETIRE on EOS or per-request max-tokens and are immediately
+    reusable; freed slots are scrubbed in one batched reset per tick
+    (`rnn_reset_slots` zeroes h/c, `cache_reset_slots` drops the per-slot
+    cache pos so stale KV reads as unwritten).
+
+Sampling is per-slot vectorized (serve/sampler.sample_slots): each slot
+carries its own temperature / top-k / PRNG key chain, and a slot's draws are
+bit-identical to running that request alone through `drive_session` — the
+engine changes the schedule, not the tokens.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.sampler import sample_slots
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.  `arrival_s` is the submit time relative to
+    engine start (0 = already queued) — the traffic replay sets it from a
+    Poisson process; latency is measured against it."""
+
+    prompt: Any                  # (S,) int token ids (list / np / jnp)
+    max_tokens: int
+    temperature: float = 0.8
+    top_k: int = 0
+    seed: int = 0
+    arrival_s: float = 0.0
+    rid: Optional[int] = None    # engine numbers admissions when None (the
+                                 # Request object itself is never mutated)
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    tokens: List[int]            # sampled ids, EOS included when hit
+    prompt_len: int
+    finished: str                # 'length' | 'eos'
+    slot: int
+    t_submit: float              # engine-relative seconds
+    t_admit: float
+    t_first: float               # first token sampled (== admit: prefill samples)
+    t_done: float
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_done - self.t_submit
+
+    @property
+    def queue_s(self) -> float:
+        return self.t_admit - self.t_submit
+
+
+@dataclasses.dataclass
+class _Active:
+    req: Request
+    rid: int            # kept here so the caller's Request is never mutated
+    tokens: List[int]
+    t_submit: float
+    t_admit: float
+
+
+# ---------------------------------------------------------------------------
+# generic slot surgery over state pytrees
+# ---------------------------------------------------------------------------
+
+
+def tree_write_slot(pool, sub, slot):
+    """Insert a batch-1 state pytree into row `slot` of every pool leaf.
+
+    Works for any state the runtimes produce — stacked or tail
+    AttnCache/SSMState/RWKVState nodes and bare array leaves alike — by
+    delegating AttnCache nodes to `kvcache.cache_write_slot` (the one
+    attention-cache insert implementation) and everything else to
+    `kvcache.write_row`, which recovers the slot axis per leaf from the
+    static shapes.  `slot` itself is traced, so one compilation serves
+    every admission."""
+    from repro.serve.kvcache import AttnCache, cache_write_slot, write_row
+
+    is_cache = lambda x: isinstance(x, AttnCache)
+    return jax.tree.map(
+        lambda p, s: (cache_write_slot(p, s, slot) if is_cache(p)
+                      else write_row(p, s, slot)),
+        pool, sub, is_leaf=is_cache)
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+
+class ServeEngine:
+    """Slotted continuous-batching scheduler over one serving runtime.
+
+    eng = ServeEngine(rt, vocab, slots=8, max_context=512)
+    completions, metrics = eng.run(requests)
+
+    Invariants (DESIGN.md §7):
+      * mask-don't-reshape — the pool state, the token/key/temperature
+        arrays and therefore the jitted tick keep shape (B, ...) forever;
+        occupancy lives in a boolean mask;
+      * one trace — `tick_traces` counts jit traces of the decode tick and
+        stays at 1 across arbitrary admit/retire interleavings;
+      * per-request determinism — a request's token stream depends only on
+        (prompt, seed, sampling params), never on which slot it landed in
+        or what shared the batch.
+    """
+
+    def __init__(self, rt, vocab: int, *, slots: int, max_context: int,
+                 eos_id: Optional[int] = None):
+        if slots < 1:
+            raise ValueError("need at least one slot")
+        if getattr(rt, "extras", None):
+            raise NotImplementedError(
+                "continuous batching over cross-attention runtimes (vlm/"
+                "audio) needs per-request source encodings; the engine "
+                "currently schedules self-attention and recurrent archs")
+        self.rt = rt
+        self.vocab = int(vocab)
+        self.n_slots = int(slots)
+        self.max_context = int(max_context)
+        self.eos_id = eos_id
+
+        self.pool = rt.init_state(self.n_slots, self.max_context,
+                                  per_slot=True)
+        B = self.n_slots
+        self._pending = jnp.zeros((B,), jnp.int32)   # next token to feed
+        self._live = jnp.zeros((B,), bool)
+        self._keys = jnp.zeros((B, 2), jnp.uint32)   # per-slot PRNG chain
+        self._temp = jnp.ones((B,), jnp.float32)
+        self._topk = jnp.zeros((B,), jnp.int32)
+        self._live_host = np.zeros(B, bool)
+        self._active: List[Optional[_Active]] = [None] * B
+        self._rid = 0
+
+        self.ticks = 0
+        self.tick_traces = 0      # python counter bumped at TRACE time only
+        self._occupancy_sum = 0.0
+
+        def tick(pool, pending, live, keys, temp, topk):
+            self.tick_traces += 1
+            logits, pool = rt.decode_fn(pending, pool, live)
+            ks = jax.vmap(jax.random.split)(keys)    # (B, 2, 2)
+            nxt = sample_slots(logits, ks[:, 1], temperature=temp,
+                               top_k=topk, vocab=self.vocab)
+            # dead slots: freeze the key chain and keep feeding the same
+            # token, so a zombie slot's arrays are time-invariant
+            nxt = jnp.where(live, nxt, pending)
+            keys = jnp.where(live[:, None], ks[:, 0], keys)
+            return pool, nxt, keys
+
+        # the pool is dead the moment the tick/write/reset returns its
+        # successor, so donate it (and the pending/key chains) — without
+        # donation every tick would COPY all B KV caches.  CPU ignores
+        # donation with a warning, so only ask off-CPU.
+        cpu = jax.default_backend() == "cpu"
+        self._tick = jax.jit(tick, donate_argnums=() if cpu else (0, 1, 3))
+
+        def admit_sample(logits, key, temp, topk):
+            # the request's first token: same key discipline as the
+            # sequential loop (split once, sample with the second half)
+            ks = jax.random.split(key)
+            tok = sample_slots(logits, ks[1][None], temperature=temp[None],
+                               top_k=topk[None], vocab=self.vocab)[0]
+            return tok, ks[0]
+
+        self._admit_sample = jax.jit(admit_sample)
+        write = rt.write_slots if hasattr(rt, "write_slots") else tree_write_slot
+        self._write = jax.jit(write, donate_argnums=() if cpu else (0,))
+        # retire-time slot scrub: RNN pools zero the slot's h/c
+        # (bnlstm.rnn_reset_slots); attention pools drop the slot's per-slot
+        # cache pos so stale KV is masked (kvcache.cache_reset_slots)
+        self._reset = (jax.jit(rt.reset_slots,
+                               donate_argnums=() if cpu else (0,))
+                       if hasattr(rt, "reset_slots") else None)
+
+    # -- admission ----------------------------------------------------------
+
+    def _validate(self, req: Request) -> None:
+        size = int(np.asarray(req.prompt).size)
+        if size == 0:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if req.max_tokens < 1:
+            raise ValueError(f"request {req.rid}: max_tokens must be >= 1 "
+                             f"(got {req.max_tokens}) — admission always "
+                             f"samples the first token from the prefill")
+        if size + req.max_tokens > self.max_context:
+            raise ValueError(
+                f"request {req.rid}: needs {size}+{req.max_tokens} tokens; "
+                f"engine provisioned max_context={self.max_context}")
+
+    def warm(self, prompt_lens: Sequence[int] = ()) -> None:
+        """Compile outside the measured run: the tick plus one prefill per
+        distinct prompt length (prefill traces per length; the tick never
+        retraces).  Shared by the --traffic launcher and the benchmark so
+        both measure the same warmed serving path."""
+        for L in sorted({int(l) for l in prompt_lens if l > 0}):
+            st = self.rt.init_state(1, self.max_context, per_slot=True)
+            jax.block_until_ready(
+                self.rt.prefill(jnp.zeros((1, L), jnp.int32), st)[0])
+        # a throwaway request exercises admit + the tick and leaves every
+        # slot idle again; max_tokens respects tiny max_context settings
+        n = min(2, self.max_context - 1)
+        if n >= 1:
+            self.run([Request(prompt=np.zeros(1, np.int32), max_tokens=n,
+                              temperature=1.0, top_k=0, seed=0, rid=-1)],
+                     realtime=False)
+
+    def _free_slot(self) -> Optional[int]:
+        idle = np.flatnonzero(~self._live_host)
+        return int(idle[0]) if idle.size else None
+
+    def _admit(self, req: Request, slot: int, now: float) -> Optional[Completion]:
+        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        rid = self._rid if req.rid is None else req.rid
+        self._rid = max(self._rid, rid) + 1
+
+        sub = self.rt.init_state(1, self.max_context, per_slot=True)
+        logits, sub = self.rt.prefill(jnp.asarray(prompt)[None], sub)
+        tok0, key = self._admit_sample(
+            logits, jax.random.PRNGKey(req.seed),
+            jnp.float32(req.temperature), jnp.int32(req.top_k))
+        self.pool = self._write(self.pool, sub, slot)
+        self._pending = self._pending.at[slot].set(tok0)
+        self._keys = self._keys.at[slot].set(key)
+        self._temp = self._temp.at[slot].set(req.temperature)
+        self._topk = self._topk.at[slot].set(req.top_k)
+
+        act = _Active(req=req, rid=rid, tokens=[int(tok0)],
+                      t_submit=req.arrival_s, t_admit=now)
+        done = (req.max_tokens <= 1
+                or (self.eos_id is not None and act.tokens[0] == self.eos_id))
+        if done:
+            return self._completion(act, slot, now)
+        self._active[slot] = act
+        self._live_host[slot] = True
+        self._live = self._live.at[slot].set(True)
+        return None
+
+    def _completion(self, act: _Active, slot: int, now: float) -> Completion:
+        hit_eos = (self.eos_id is not None and act.tokens
+                   and act.tokens[-1] == self.eos_id)
+        return Completion(
+            rid=act.rid, tokens=act.tokens,
+            prompt_len=int(np.asarray(act.req.prompt).size),
+            finished="eos" if hit_eos else "length", slot=slot,
+            t_submit=act.t_submit, t_admit=act.t_admit,
+            t_first=act.t_admit, t_done=now)
+
+    def _retire(self, slot: int) -> None:
+        self._active[slot] = None
+        self._live_host[slot] = False
+        self._live = self._live.at[slot].set(False)
+
+    # -- the run loop -------------------------------------------------------
+
+    def run(self, requests: Sequence[Request], *, realtime: bool = True):
+        """Drive a workload to completion.  Returns (completions, metrics).
+
+        `realtime=True` honours `arrival_s` against the wall clock (traffic
+        replay: a request is invisible until it arrives).  `realtime=False`
+        treats arrivals as a priority order only — fastest way to drain a
+        batch, and what the deterministic parity tests use."""
+        for r in requests:  # fail fast, BEFORE any request is in flight:
+            self._validate(r)  # a bad request must not poison the workload
+        queue = deque(sorted(requests, key=lambda r: r.arrival_s))
+        completions: List[Completion] = []
+        t0 = time.perf_counter()
+        gen_tokens = 0
+        ticks0, occ0 = self.ticks, self._occupancy_sum  # per-run deltas
+
+        while queue or self._live_host.any():
+            now = time.perf_counter() - t0
+            # admit while there is traffic that has arrived and a free slot
+            while queue and (not realtime or queue[0].arrival_s <= now):
+                slot = self._free_slot()
+                if slot is None:
+                    break
+                req = queue.popleft()
+                now = time.perf_counter() - t0
+                done = self._admit(req, slot, now)
+                gen_tokens += 1  # prefill samples the request's first token
+                if done is not None:
+                    completions.append(done)
+
+            if not self._live_host.any():
+                if queue and realtime:
+                    # idle until the next arrival
+                    wait = queue[0].arrival_s - (time.perf_counter() - t0)
+                    if wait > 0:
+                        time.sleep(min(wait, 0.05))
+                continue
+
+            self.pool, self._pending, self._keys = self._tick(
+                self.pool, self._pending, self._live, self._keys,
+                self._temp, self._topk)
+            self.ticks += 1
+            n_live = int(self._live_host.sum())
+            self._occupancy_sum += n_live / self.n_slots
+            gen_tokens += n_live
+
+            # one small device->host transfer per tick: the scheduler needs
+            # the sampled ids to detect EOS / quota and to free slots
+            toks = np.asarray(self._pending)
+            now = time.perf_counter() - t0
+            retired = np.zeros(self.n_slots, bool)
+            for slot in np.flatnonzero(self._live_host):
+                act = self._active[slot]
+                act.tokens.append(int(toks[slot]))
+                hit_eos = (self.eos_id is not None
+                           and act.tokens[-1] == self.eos_id)
+                if hit_eos or len(act.tokens) >= act.req.max_tokens:
+                    completions.append(self._completion(act, int(slot), now))
+                    self._retire(int(slot))
+                    retired[slot] = True
+            if retired.any() and self._reset is not None:
+                # scrub the freed slots in ONE batched call (rnn_reset_slots
+                # / cache_reset_slots): zombie rows carry no stale state
+                self.pool = self._reset(self.pool, jnp.asarray(retired))
+
+        wall = time.perf_counter() - t0
+        ticks = self.ticks - ticks0
+        occ = self._occupancy_sum - occ0
+        lat = sorted(c.latency_s for c in completions)
+        pct = lambda p: lat[min(len(lat) - 1, int(p * len(lat)))] if lat else 0.0
+        metrics = {
+            "requests": len(completions),
+            "wall_s": wall,
+            "gen_tokens": gen_tokens,
+            "agg_tok_s": gen_tokens / wall if wall > 0 else 0.0,
+            "p50_latency_s": pct(0.50),
+            "p95_latency_s": pct(0.95),
+            "ticks": ticks,
+            "tick_traces": self.tick_traces,  # cumulative on purpose: the
+            "occupancy": occ / ticks if ticks else 0.0,  # invariant is ==1
+        }
+        return completions, metrics

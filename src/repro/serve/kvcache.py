@@ -81,24 +81,51 @@ def constrain_cache(c: AttnCache) -> AttnCache:
 
 
 def cache_init(batch: int, cap: int, heads: int, hd: int, dtype,
-               *, ring: bool = False) -> AttnCache:
+               *, ring: bool = False, per_slot: bool = False) -> AttnCache:
+    """`per_slot=True` gives the cache a PER-SLOT write position `(B,)`
+    instead of the lockstep scalar — the continuous-batching engine's slots
+    sit at different depths in their sequences, so every batch row appends
+    at its own offset and masks with its own kv positions."""
+    pos = jnp.zeros((batch,) if per_slot else (), jnp.int32)
     return AttnCache(
         k=jnp.zeros((batch, cap, heads, hd), dtype),
         v=jnp.zeros((batch, cap, heads, hd), dtype),
-        pos=jnp.zeros((), jnp.int32),
+        pos=pos,
         ring=ring,
     )
 
 
 def cache_positions(c: AttnCache) -> Array:
-    """Absolute position stored in each slot; -1 marks unwritten/invalid."""
+    """Absolute position stored in each slot; -1 marks unwritten/invalid.
+    Scalar pos -> (cap,); per-slot pos (B,) -> (B, cap)."""
     cap = c.k.shape[1]
     slots = jnp.arange(cap, dtype=jnp.int32)
+    pos = c.pos if c.pos.ndim == 0 else c.pos[:, None]
     if c.ring:
         # slot s holds the largest a < pos with a % cap == s
-        a = c.pos - 1 - jnp.mod(c.pos - 1 - slots, cap)
-        return jnp.where((a >= 0) & (c.pos > 0), a, -1)
-    return jnp.where(slots < c.pos, slots, -1)
+        a = pos - 1 - jnp.mod(pos - 1 - slots, cap)
+        return jnp.where((a >= 0) & (pos > 0), a, -1)
+    return jnp.where(slots < pos, slots, -1)
+
+
+def _update_per_slot(c: AttnCache, k_new: Array, v_new: Array) -> AttnCache:
+    """Per-slot append: every batch row writes its S new tokens at its OWN
+    position.  One scatter covers decode (S=1, B slots at B depths) and
+    prefill-into-slot (B=1, S prompt tokens from pos 0).  Non-ring writes
+    clamp at cap-1 — overfull rows are retired/zombie slots whose output is
+    masked anyway, and clamping keeps the write in-bounds without a branch."""
+    cap = c.k.shape[1]
+    S = k_new.shape[1]
+    if c.ring and S > cap:  # keep only the in-window tail
+        k_new, v_new = k_new[:, -cap:], v_new[:, -cap:]
+        c = c._replace(pos=c.pos + (S - cap))
+        S = cap
+    abs_pos = c.pos[:, None] + jnp.arange(S, dtype=jnp.int32)  # (B, S)
+    slot = jnp.mod(abs_pos, cap) if c.ring else jnp.clip(abs_pos, 0, cap - 1)
+    rows = jnp.arange(c.k.shape[0], dtype=jnp.int32)[:, None]
+    k = c.k.at[rows, slot].set(k_new)
+    v = c.v.at[rows, slot].set(v_new)
+    return constrain_cache(AttnCache(k=k, v=v, pos=c.pos + S, ring=c.ring))
 
 
 def cache_update(c: AttnCache, k_new: Array, v_new: Array) -> AttnCache:
@@ -107,9 +134,12 @@ def cache_update(c: AttnCache, k_new: Array, v_new: Array) -> AttnCache:
     Non-ring: writes at [pos, pos+S).  Ring: writes each token at its
     (absolute position % window) slot; assumes S_new <= capacity or the
     early tokens are overwritten (correct: they'd be out of window anyway).
+    With a per-slot pos (B,) every row appends at its own offset.
     """
     cap = c.k.shape[1]
     S = k_new.shape[1]
+    if c.pos.ndim == 1:
+        return _update_per_slot(c, k_new, v_new)
     if c.ring and S > 1:
         # prefill into a ring: keep only the last min(S, cap) tokens
         take = min(S, cap)
@@ -130,3 +160,57 @@ def cache_update(c: AttnCache, k_new: Array, v_new: Array) -> AttnCache:
 
 def cache_bytes(c: AttnCache) -> int:
     return c.k.size * c.k.dtype.itemsize * 2
+
+
+# ---------------------------------------------------------------------------
+# slot surgery (continuous batching, DESIGN.md §7): a cache row is a serving
+# slot.  Admission copies a freshly prefilled B=1 cache into one row of the
+# pool; retirement resets the row's position so its stale k/v are masked
+# (cache_positions returns -1 past pos) rather than resliced.
+# ---------------------------------------------------------------------------
+
+
+def _slot_axis(pool_shape, sub_shape) -> Optional[int]:
+    """The axis where a batch-1 sub-state differs from the pool: that is
+    the slot axis.  Equal shapes mean a 1-slot pool (whole replace)."""
+    if tuple(pool_shape) == tuple(sub_shape):
+        return None
+    for i, (p, s) in enumerate(zip(pool_shape, sub_shape)):
+        if p != s:
+            if s != 1:
+                raise ValueError(f"sub-state axis {i} must be 1, got "
+                                 f"{sub_shape} vs pool {pool_shape}")
+            return i
+    raise ValueError(f"no slot axis between {pool_shape} and {sub_shape}")
+
+
+def write_row(p: Array, s: Array, slot) -> Array:
+    """Insert batch-1 leaf `s` into row `slot` of pool leaf `p` along the
+    recovered slot axis (shapes are static under jit; `slot` is traced, so
+    one compilation serves every admission)."""
+    ax = _slot_axis(p.shape, s.shape)
+    if ax is None:
+        return s.astype(p.dtype)
+    idx = (slice(None),) * ax + (slot,)
+    return p.at[idx].set(jnp.squeeze(s, axis=ax).astype(p.dtype))
+
+
+def cache_write_slot(c: AttnCache, sub: AttnCache, slot) -> AttnCache:
+    """Insert a single-sequence cache (batch 1) into row `slot` of a
+    per-slot pool.  `sub` must share the pool's capacity so the insert is a
+    plain row copy — the engine prefills new requests against a pool-shaped
+    B=1 cache for exactly this reason.  Works on a bare cache (slot axis 0)
+    and on layer-stacked leaves (slot axis 1); the engine's generic
+    `tree_write_slot` routes every AttnCache node through here."""
+    pos = sub.pos if sub.pos.ndim else sub.pos[None]  # normalize scalar pos
+    return c._replace(k=write_row(c.k, sub.k, slot),
+                      v=write_row(c.v, sub.v, slot),
+                      pos=write_row(c.pos, pos, slot))
+
+
+def cache_reset_slots(c: AttnCache, mask: Array) -> AttnCache:
+    """Retire slots where `mask` is True: per-slot pos drops to 0, so every
+    kv position in the row reads as unwritten (-1) and attention masks it.
+    k/v bytes are left in place — mask-don't-reshape keeps the decode step's
+    shapes (and its jit trace) occupancy-independent."""
+    return c._replace(pos=jnp.where(mask, 0, c.pos))

@@ -59,6 +59,7 @@ class RNNRuntime:
                  interpret: Optional[bool] = None):
         self.cfg = cfg
         self.variables = variables
+        self._interpret = interpret
         # once per session: dequantized layer-0 rows, BN affines, gate codes
         self.tables = BL.rnn_decode_tables(variables, cfg)
         def prefill_last(v, tb, toks, st):
@@ -72,15 +73,31 @@ class RNNRuntime:
             lambda v, tb, tok, st: BL.rnn_decode_step(
                 v, tok, cfg, st, tables=tb, interpret=interpret))
 
-    def init_state(self, batch: int, context: int = 0) -> BL.RNNState:
+    def init_state(self, batch: int, context: int = 0, *,
+                   per_slot: bool = False) -> BL.RNNState:
         del context  # constant-size state: the RNN's whole point
-        return BL.rnn_state_init(self.cfg, batch)
+        return BL.rnn_state_init(self.cfg, batch, per_slot=per_slot)
 
     def prefill(self, tokens: Array, state: BL.RNNState):
         return self._prefill(self.variables, self.tables, tokens, state)
 
     def decode_step(self, tok: Array, state: BL.RNNState):
         return self._decode(self.variables, self.tables, tok, state)
+
+    def decode_fn(self, tok: Array, state: BL.RNNState,
+                  live: Optional[Array] = None):
+        """Unjitted decode body for callers that jit a larger region (the
+        continuous-batching engine's tick).  `live` (B,) masks dead slots:
+        their h/c/pos stay bit-for-bit frozen inside the fused kernel."""
+        return BL.rnn_decode_step(self.variables, tok, self.cfg, state,
+                                  tables=self.tables, live=live,
+                                  interpret=self._interpret)
+
+    def write_slots(self, state: BL.RNNState, sub: BL.RNNState, slots):
+        return BL.rnn_write_slots(state, sub, slots)
+
+    def reset_slots(self, state: BL.RNNState, mask: Array):
+        return BL.rnn_reset_slots(state, mask)
 
     def param_nbytes(self) -> tuple[int, int]:
         return tree_nbytes(self.variables["params"])
@@ -101,16 +118,39 @@ class TransformerRuntime:
             lambda p, t, c: T.prefill(p, t, c, cfg, **self.extras))
         self._decode = jax.jit(lambda p, t, c: T.decode_step(p, t, c, cfg))
 
-    def init_state(self, batch: int, context: int):
+    def init_state(self, batch: int, context: int, *,
+                   per_slot: bool = False):
         _, src = decode_context(self.cfg, context)
         return T.init_caches(self.cfg, batch, context, src_len=src,
-                             dtype=jnp.dtype(self.cfg.dtype))
+                             dtype=jnp.dtype(self.cfg.dtype),
+                             per_slot=per_slot)
 
     def prefill(self, tokens: Array, state):
         return self._prefill(self.params, tokens, state)
 
     def decode_step(self, tok: Array, state):
         return self._decode(self.params, tok, state)
+
+    def decode_fn(self, tok: Array, state, live: Optional[Array] = None):
+        """Unjitted decode body for callers that jit a larger region (the
+        continuous-batching engine's tick).  Dead slots need no state mask
+        here: a per-slot cache write stays in-bounds (clamped) and admission
+        rewrites the whole cache row, so zombie rows are harmless; their
+        logits are garbage and the engine never samples them."""
+        del live
+        return T.decode_step(self.params, tok, state, self.cfg)
+
+    def reset_slots(self, state, mask: Array):
+        """Retire slots where `mask` (B,) is True: every AttnCache in the
+        pool drops its per-slot pos to 0 (stale KV reads as unwritten and
+        is masked — kvcache.cache_reset_slots), bounding what a zombie row
+        attends over.  Recurrent SSM/RWKV leaves stay as-is; admission
+        rewrites the whole slot row anyway."""
+        from repro.serve.kvcache import AttnCache, cache_reset_slots
+        is_cache = lambda x: isinstance(x, AttnCache)
+        return jax.tree.map(
+            lambda x: cache_reset_slots(x, mask) if is_cache(x) else x,
+            state, is_leaf=is_cache)
 
     def param_nbytes(self) -> tuple[int, int]:
         return tree_nbytes(self.params)
@@ -126,7 +166,7 @@ def serving_runtime(cfg, params, **kw):
 
 def drive_session(rt, prompt: Array, vocab: int, *, gen: int,
                   temperature: float = 0.8, top_k: int = 0, seed: int = 0,
-                  warmup: bool = False):
+                  warmup: bool = False, context: Optional[int] = None):
     """The canonical prefill -> sample -> decode session, timed.
 
     One implementation drives the launcher AND the serve_decode benchmark,
@@ -134,15 +174,32 @@ def drive_session(rt, prompt: Array, vocab: int, *, gen: int,
     `warmup` an untimed prefill + decode step runs first, so the recorded
     tok/s measures the serving path rather than jit tracing/compilation.
 
+    `context` overrides the provisioned context length (default: exactly
+    S + gen).  The engine parity tests pass the engine pool's max_context so
+    the sequential baseline attends over an identically-sized cache.
+
     Returns (generated (B, gen) int array, metrics dict with prefill/decode
     seconds, tok/s, and the per-session state bytes)."""
     B, S = prompt.shape
-    state = rt.init_state(B, S + gen)
+    context = context or (S + gen)
     if warmup:
-        lg_w, st_w = rt.prefill(prompt, state)
+        # warmup owns its OWN state; the timed run below starts from a fresh
+        # init_state, so warmup can never leak a prefilled state (or retain
+        # st_w's memory) into the measurement
+        st_w = rt.init_state(B, context)
+        lg_w, st_w = rt.prefill(prompt, st_w)
         nxt_w = sample(lg_w, jax.random.PRNGKey(0), temperature=temperature,
                        top_k=top_k, vocab=vocab)
         jax.block_until_ready(rt.decode_step(nxt_w, st_w)[0])
+        del lg_w, st_w, nxt_w
+
+    state = rt.init_state(B, context)
+    # clean-state invariant: every position counter of a fresh state is 0
+    # (the float leaves are zeros by construction; pos is what warmup could
+    # plausibly have threaded through)
+    assert all(int(jnp.sum(l)) == 0
+               for l in jax.tree_util.tree_leaves(state)
+               if hasattr(l, "dtype") and jnp.issubdtype(l.dtype, jnp.integer))
 
     t0 = time.perf_counter()
     logits, state = rt.prefill(prompt, state)
@@ -156,12 +213,15 @@ def drive_session(rt, prompt: Array, vocab: int, *, gen: int,
         key, sk = jax.random.split(key)
         nxt = sample(logits, sk, temperature=temperature, top_k=top_k,
                      vocab=vocab)
-        toks.append(np.asarray(nxt))
+        # accumulate ON DEVICE: np.asarray here would block on the transfer
+        # every iteration and the recorded decode tok/s would measure host
+        # round-trips, not the serving path
+        toks.append(nxt)
         logits, state = rt.decode_step(nxt, state)
     jax.block_until_ready(logits)
     t_decode = time.perf_counter() - t0
 
-    out = np.stack(toks, axis=1)
+    out = np.stack([np.asarray(t) for t in toks], axis=1)
     metrics = {
         "prefill_s": t_prefill,
         "decode_s": t_decode,

@@ -1,4 +1,12 @@
-"""Token samplers for the serving loop."""
+"""Token samplers for the serving loop.
+
+`sample` is the scalar-config path (one temperature/top_k/key for the whole
+batch) the lockstep launcher uses.  `sample_slots` is the per-slot vectorized
+form the continuous-batching engine uses: every slot carries its own
+temperature, top-k and PRNG key, and a slot's draw is bit-identical to what
+`sample` would produce for that request alone — that equivalence is what
+makes engine-vs-sequential token parity possible (tests/test_serve_engine.py).
+"""
 from __future__ import annotations
 
 import jax
@@ -24,3 +32,34 @@ def sample(logits: Array, key: Array, *, temperature: float = 1.0,
         kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
         logits = jnp.where(logits >= kth, logits, neg)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def sample_slots(logits: Array, keys: Array, *, temperature: Array,
+                 top_k: Array, vocab: int = 0) -> Array:
+    """Per-slot sampling: logits (B, V), keys (B, 2), temperature (B,) fp,
+    top_k (B,) int32 -> (B,) int32.
+
+    Row semantics match `sample(logits[i:i+1], keys[i], temperature[i],
+    top_k[i])` bit-for-bit: the vocab mask and temperature scaling are the
+    same elementwise ops, the k-th-largest threshold comes from a descending
+    sort (identical values to `lax.top_k`, but the static-k constraint is
+    gone so per-slot k never retraces), and the categorical draw under vmap
+    generates the same threefry bits as the B=1 call (counter-based bits
+    depend only on the flat element count, and (1, V) flattens to (V,)).
+    temperature <= 0 means greedy for that slot; top_k <= 0 disables the
+    top-k filter for that slot."""
+    V = logits.shape[-1]
+    neg = jnp.finfo(logits.dtype).min
+    if vocab and V > vocab:
+        logits = jnp.where(jnp.arange(V) < vocab, logits, neg)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    t = temperature.astype(logits.dtype)[:, None]
+    scaled = logits / jnp.where(t > 0, t, jnp.ones_like(t))
+    desc = -jnp.sort(-scaled, axis=-1)  # descending: desc[:, k-1] = kth largest
+    kth = jnp.take_along_axis(
+        desc, jnp.clip(top_k - 1, 0, V - 1)[:, None], axis=-1)
+    filtered = jnp.where(scaled >= kth, scaled, neg)
+    final = jnp.where((top_k > 0)[:, None], filtered, scaled)
+    drawn = jax.vmap(lambda k, l: jax.random.categorical(k, l))(keys, final)
+    return jnp.where(temperature > 0, drawn.astype(jnp.int32), greedy)

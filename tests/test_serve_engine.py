@@ -1,0 +1,292 @@
+"""Continuous-batching serve engine (DESIGN.md §7): slot surgery must be
+exact, the decode tick must compile once regardless of occupancy churn, and
+a request's token stream through the engine must be BYTE-IDENTICAL to
+running it alone through the sequential `drive_session` loop — continuous
+batching changes the schedule, never the tokens."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import bnlstm as BL
+from repro.core.quantize import QuantSpec
+from repro.models import transformer as T
+from repro.serve.engine import Request, ServeEngine, tree_write_slot
+from repro.serve.kvcache import (cache_init, cache_positions, cache_reset_slots,
+                                 cache_update, cache_write_slot)
+from repro.serve.recurrent import (RNNRuntime, TransformerRuntime,
+                                   drive_session, serving_runtime)
+from repro.serve.sampler import sample, sample_slots
+
+
+def _rnn_cfg(cell, mode="ternary"):
+    return BL.RNNConfig(vocab=24, d_hidden=48, n_layers=2, cell=cell,
+                        quant=QuantSpec(mode=mode, norm="batch"))
+
+
+def _rnn_runtime(cell, packed=True, seed=0):
+    cfg = _rnn_cfg(cell) if packed else dataclasses.replace(
+        _rnn_cfg(cell), quant=QuantSpec(mode="none"))
+    var = BL.rnn_lm_init(jax.random.PRNGKey(seed), cfg)
+    params = var["params"]
+    if packed:
+        params = BL.export_packed_rnn(params, cfg)
+    return cfg, RNNRuntime(cfg, {"params": params, "state": var["state"]})
+
+
+def _requests(vocab, n, *, rng_seed=0, max_prompt=10, max_gen=8):
+    rng = np.random.default_rng(rng_seed)
+    return [Request(prompt=rng.integers(0, vocab,
+                                        size=int(rng.integers(2, max_prompt))),
+                    max_tokens=int(rng.integers(1, max_gen)),
+                    temperature=0.8, top_k=5, seed=100 + i, rid=i)
+            for i in range(n)]
+
+
+# --- per-slot sampler: bit-parity with the scalar path -----------------------
+
+
+def test_sample_slots_matches_scalar_sample_per_row():
+    logits = jax.random.normal(jax.random.PRNGKey(3), (6, 33))
+    temps = jnp.array([0.8, 0.0, 1.3, 0.5, 2.0, 0.8])
+    topks = jnp.array([4, 0, 0, 7, 2, 33], jnp.int32)
+    keys = jnp.stack([jax.random.PRNGKey(i) for i in range(6)])
+    vec = sample_slots(logits, keys, temperature=temps, top_k=topks, vocab=30)
+    for i in range(6):
+        ref = sample(logits[i:i + 1], keys[i], temperature=float(temps[i]),
+                     top_k=int(topks[i]), vocab=30)[0]
+        assert int(ref) == int(vec[i])
+
+
+# --- slot surgery ------------------------------------------------------------
+
+
+def test_rnn_write_and_reset_slots():
+    cfg = _rnn_cfg("lstm")
+    pool = BL.rnn_state_init(cfg, 4, per_slot=True)
+    assert pool.pos.shape == (4,)
+    sub = BL.RNNState(h=jnp.ones((cfg.n_layers, 1, cfg.d_hidden)),
+                      c=2 * jnp.ones((cfg.n_layers, 1, cfg.d_hidden)),
+                      pos=jnp.array([7], jnp.int32))
+    pool = BL.rnn_write_slots(pool, sub, 2)
+    assert float(pool.h[:, 2].min()) == 1.0 and float(pool.c[:, 2].max()) == 2.0
+    assert pool.pos.tolist() == [0, 0, 7, 0]
+    assert float(jnp.abs(pool.h[:, [0, 1, 3]]).max()) == 0.0  # others untouched
+    pool = BL.rnn_reset_slots(pool, jnp.array([False, False, True, False]))
+    assert float(jnp.abs(pool.h).max()) == 0.0
+    assert pool.pos.tolist() == [0, 0, 0, 0]
+
+
+def test_cache_write_slot_and_reset():
+    pool = cache_init(3, 8, 2, 4, jnp.float32, per_slot=True)
+    sub = cache_init(1, 8, 2, 4, jnp.float32, per_slot=True)
+    k = jnp.ones((1, 5, 2, 4))
+    sub = cache_update(sub, k, 2 * k)  # write 5 tokens into the B=1 cache
+    assert sub.pos.tolist() == [5]
+    pool = cache_write_slot(pool, sub, 1)
+    assert pool.pos.tolist() == [0, 5, 0]
+    np.testing.assert_array_equal(np.asarray(pool.k[1]), np.asarray(sub.k[0]))
+    kv = cache_positions(pool)  # (B, cap): only slot 1 has valid positions
+    assert kv.shape == (3, 8)
+    assert kv[1].tolist() == [0, 1, 2, 3, 4, -1, -1, -1]
+    assert kv[0].tolist() == [-1] * 8
+    pool = cache_reset_slots(pool, jnp.array([False, True, False]))
+    assert pool.pos.tolist() == [0, 0, 0]
+    assert cache_positions(pool)[1].tolist() == [-1] * 8  # masked, not resliced
+
+
+def test_per_slot_cache_update_rows_are_independent():
+    """Decode appends at each slot's OWN depth (the mixed-length invariant)."""
+    pool = cache_init(3, 6, 1, 2, jnp.float32, per_slot=True)
+    pool = pool._replace(pos=jnp.array([0, 2, 5], jnp.int32))
+    k1 = jnp.arange(6, dtype=jnp.float32).reshape(3, 1, 1, 2) + 1
+    pool = cache_update(pool, k1, k1)
+    assert pool.pos.tolist() == [1, 3, 6]
+    assert float(pool.k[0, 0, 0, 0]) == 1.0
+    assert float(pool.k[1, 2, 0, 0]) == 3.0
+    assert float(pool.k[2, 5, 0, 0]) == 5.0
+
+
+def test_tree_write_slot_transformer_pool():
+    """The generic writer finds the slot axis of every stacked cache leaf
+    (axis 1 behind the layer stack, axis 0 for tail caches / pos)."""
+    cfg = get_config("qwen3-0.6b").reduced()
+    pool = T.init_caches(cfg, 3, 16, dtype=jnp.float32, per_slot=True)
+    sub = T.init_caches(cfg, 1, 16, dtype=jnp.float32, per_slot=True)
+    sub = jax.tree.map(lambda a: jnp.ones_like(a), sub)
+    out = tree_write_slot(pool, sub, 1)
+    for p, s in zip(jax.tree_util.tree_leaves(out),
+                    jax.tree_util.tree_leaves(sub)):
+        ax = next(i for i, (a, b) in enumerate(zip(p.shape, s.shape)) if a != b)
+        row = jnp.take(p, 1, axis=ax).astype(jnp.float32)
+        others = jnp.take(p, jnp.array([0, 2]), axis=ax).astype(jnp.float32)
+        assert float(jnp.abs(row - 1.0).max()) == 0.0   # slot 1 took the sub
+        assert float(jnp.abs(others).max()) == 0.0      # 0/2 untouched
+
+
+# --- live-mask: dead slots are frozen bit-for-bit ----------------------------
+
+
+@pytest.mark.parametrize("cell", ["lstm", "gru"])
+@pytest.mark.parametrize("packed", [True, False], ids=["fused", "unfused"])
+def test_decode_step_live_mask_freezes_dead_slots(cell, packed):
+    cfg, rt = _rnn_runtime(cell, packed=packed)
+    st = BL.rnn_state_init(cfg, 3, per_slot=True)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 3), 0, cfg.vocab)
+    # walk all slots off zero first
+    for i in range(2):
+        _, st = rt.decode_fn(toks[i], st)
+    live = jnp.array([True, False, True])
+    lg, st2 = rt.decode_fn(toks[2], st, live)
+    # dead slot 1: h/c/pos bit-identical
+    np.testing.assert_array_equal(np.asarray(st2.h[:, 1]), np.asarray(st.h[:, 1]))
+    np.testing.assert_array_equal(np.asarray(st2.c[:, 1]), np.asarray(st.c[:, 1]))
+    assert st2.pos.tolist() == [3, 2, 3]
+    # live slots: bit-identical to an unmasked step
+    lg_all, st_all = rt.decode_fn(toks[2], st)
+    np.testing.assert_array_equal(np.asarray(st2.h[:, 0]), np.asarray(st_all.h[:, 0]))
+    np.testing.assert_array_equal(np.asarray(st2.h[:, 2]), np.asarray(st_all.h[:, 2]))
+    np.testing.assert_array_equal(np.asarray(lg[0]), np.asarray(lg_all[0]))
+
+
+# --- the acceptance bar: engine == sequential, token for token ---------------
+
+
+@pytest.mark.parametrize("cell,packed", [("lstm", True), ("lstm", False),
+                                         ("gru", True)],
+                         ids=["lstm-packed", "lstm-fp", "gru-packed"])
+def test_engine_matches_sequential_rnn(cell, packed):
+    cfg, rt = _rnn_runtime(cell, packed=packed)
+    reqs = _requests(cfg.vocab, 7, rng_seed=3)
+    eng = ServeEngine(rt, cfg.vocab, slots=3, max_context=64)
+    comps, m = eng.run([dataclasses.replace(r) for r in reqs], realtime=False)
+    assert m["requests"] == len(reqs)
+    by_rid = {c.rid: c for c in comps}
+    for r in reqs:
+        out, _ = drive_session(
+            rt, jnp.asarray(np.asarray(r.prompt, np.int32))[None], cfg.vocab,
+            gen=r.max_tokens, temperature=r.temperature, top_k=r.top_k,
+            seed=r.seed)
+        assert by_rid[r.rid].tokens == out[0].tolist()  # atol 0: identical
+
+
+@pytest.mark.parametrize("packed", [False, True], ids=["fp", "packed"])
+def test_engine_matches_sequential_transformer(packed):
+    cfg = get_config("qwen3-0.6b").reduced()
+    if packed:
+        cfg = cfg.with_quant(QuantSpec(mode="ternary", norm="channel"))
+    params = T.model_init(jax.random.PRNGKey(0), cfg)
+    if packed:
+        from repro.core.qtensor import export_packed
+        params = export_packed(params, cfg.quant)
+    rt = TransformerRuntime(cfg, params)
+    reqs = _requests(cfg.vocab, 4, rng_seed=5, max_prompt=8, max_gen=5)
+    CTX = 48
+    eng = ServeEngine(rt, cfg.vocab, slots=2, max_context=CTX)
+    comps, _ = eng.run([dataclasses.replace(r) for r in reqs], realtime=False)
+    by_rid = {c.rid: c for c in comps}
+    for r in reqs:
+        # same provisioned context so the sequential baseline attends over
+        # an identically-sized (masked) cache
+        out, _ = drive_session(
+            rt, jnp.asarray(np.asarray(r.prompt, np.int32))[None], cfg.vocab,
+            gen=r.max_tokens, temperature=r.temperature, top_k=r.top_k,
+            seed=r.seed, context=CTX)
+        assert by_rid[r.rid].tokens == out[0].tolist()
+
+
+def test_engine_matches_sequential_ring_cache():
+    """gemma3's local layers use ring (sliding-window) KV buffers: the
+    per-slot scatter append + per-slot ring cache_positions must reproduce
+    the scalar lockstep path token-for-token."""
+    cfg = get_config("gemma3-27b").reduced()
+    assert "local" in cfg.block_pattern  # the arch actually exercises rings
+    params = T.model_init(jax.random.PRNGKey(0), cfg)
+    rt = TransformerRuntime(cfg, params)
+    reqs = _requests(cfg.vocab, 3, rng_seed=7, max_prompt=7, max_gen=4)
+    CTX = 24
+    eng = ServeEngine(rt, cfg.vocab, slots=2, max_context=CTX)
+    comps, _ = eng.run([dataclasses.replace(r) for r in reqs], realtime=False)
+    by_rid = {c.rid: c for c in comps}
+    for r in reqs:
+        out, _ = drive_session(
+            rt, jnp.asarray(np.asarray(r.prompt, np.int32))[None], cfg.vocab,
+            gen=r.max_tokens, temperature=r.temperature, top_k=r.top_k,
+            seed=r.seed, context=CTX)
+        assert by_rid[r.rid].tokens == out[0].tolist()
+
+
+def test_engine_staggered_arrivals_change_schedule_not_tokens():
+    """Arrival order / slot assignment must not leak into any stream."""
+    cfg, rt = _rnn_runtime("lstm")
+    reqs = _requests(cfg.vocab, 6, rng_seed=11)
+    for i, r in enumerate(reqs):
+        r.arrival_s = 0.01 * (len(reqs) - i)  # reversed admission order
+    a, _ = ServeEngine(rt, cfg.vocab, slots=2, max_context=64).run(
+        [dataclasses.replace(r) for r in reqs], realtime=False)
+    for r in reqs:
+        r.arrival_s = 0.0
+    b, _ = ServeEngine(rt, cfg.vocab, slots=3, max_context=64).run(
+        [dataclasses.replace(r) for r in reqs], realtime=False)
+    ta = {c.rid: c.tokens for c in a}
+    tb = {c.rid: c.tokens for c in b}
+    assert ta == tb
+
+
+def test_engine_eos_retires_slot():
+    cfg, rt = _rnn_runtime("lstm")
+    probe, _ = drive_session(rt, jnp.zeros((1, 3), jnp.int32), cfg.vocab,
+                             gen=6, temperature=0.8, top_k=0, seed=42)
+    stream = probe[0].tolist()
+    eos = stream[2]  # force an EOS hit mid-stream
+    eng = ServeEngine(rt, cfg.vocab, slots=2, max_context=64, eos_id=eos)
+    comps, _ = eng.run([Request(prompt=np.zeros(3, np.int64), max_tokens=6,
+                                temperature=0.8, top_k=0, seed=42)],
+                       realtime=False)
+    c = comps[0]
+    assert c.finished == "eos"
+    assert c.tokens == stream[:c.tokens.index(eos) + 1]
+    assert not eng._live_host.any()
+
+
+def test_engine_rejects_invalid_requests_upfront():
+    """A bad request must fail BEFORE anything is in flight (never mid-run),
+    and the engine must never mutate the caller's Request objects."""
+    cfg, rt = _rnn_runtime("lstm")
+    eng = ServeEngine(rt, cfg.vocab, slots=2, max_context=8)
+    with pytest.raises(ValueError, match="max_tokens"):
+        eng.run([Request(prompt=np.zeros(2, np.int32), max_tokens=0)])
+    with pytest.raises(ValueError, match="max_context"):
+        eng.run([Request(prompt=np.zeros(6, np.int32), max_tokens=8)])
+    r = Request(prompt=np.zeros(2, np.int32), max_tokens=2)
+    comps, _ = eng.run([r], realtime=False)
+    assert r.rid is None and comps[0].rid == 0
+
+
+# --- the compile-once invariant ----------------------------------------------
+
+
+def test_tick_compiles_once_across_occupancy_churn():
+    """Admits and retires between ticks must NOT retrace the decode tick —
+    occupancy is an array value, not a shape."""
+    cfg, rt = _rnn_runtime("lstm")
+    eng = ServeEngine(rt, cfg.vocab, slots=3, max_context=64)
+    # wave 1: overfull queue -> admission churn as slots free up
+    eng.run(_requests(cfg.vocab, 5, rng_seed=21), realtime=False)
+    assert eng.tick_traces == 1
+    # wave 2: different occupancy pattern on the SAME engine
+    eng.run(_requests(cfg.vocab, 2, rng_seed=22, max_gen=4), realtime=False)
+    assert eng.tick_traces == 1
+    assert eng.ticks > 2
+
+
+def test_pool_state_is_constant_shape():
+    """mask-don't-reshape: the pool pytree never changes shape over a run."""
+    cfg, rt = _rnn_runtime("lstm")
+    eng = ServeEngine(rt, cfg.vocab, slots=2, max_context=64)
+    shapes0 = [l.shape for l in jax.tree_util.tree_leaves(eng.pool)]
+    eng.run(_requests(cfg.vocab, 4, rng_seed=31), realtime=False)
+    assert [l.shape for l in jax.tree_util.tree_leaves(eng.pool)] == shapes0
