@@ -3,10 +3,13 @@
 Replays a deterministic mixed-length Poisson workload (launch/serve.py's
 `synth_traffic`) through `ServeEngine` for the paper's packed BN-LSTM and
 one transformer-pool arch, and records aggregate decode tok/s, slot
-occupancy %, and p50/p95 per-request latency into
+occupancy %, p50/p95 per-request latency, TTFT p50/p95 (time to the FIRST
+sampled token — real under chunked in-slot prefill) and the max
+decode-stall (prefill chunks one admission ran between decode ticks) into
 results/benchmarks/serve_engine.json so the BENCH trajectory accumulates
 across PRs.  The tick-trace count rides along as a regression tripwire for
-the compile-once invariant (it must be 1).
+the compile-once invariant (it must be 1), and the stall count for the
+no-head-of-line-blocking invariant (<= 1 chunk).
 
 Numbers are CPU-container interpret-mode throughputs at reduced scale: they
 track *relative* regressions of the scheduling path, not hardware ceilings.
@@ -31,27 +34,35 @@ from repro.launch.serve import synth_traffic
 
 
 def _drive(rt, vocab: int, *, slots: int, requests: int, rate: float,
-           prompt: int, gen: int, seed: int = 0) -> dict:
+           prompt: int, gen: int, seed: int = 0, chunk: int = 8) -> dict:
     ctx = prompt + gen
-    eng = ServeEngine(rt, vocab, slots=slots, max_context=ctx)
+    eng = ServeEngine(rt, vocab, slots=slots, max_context=ctx,
+                      prefill_chunk=chunk)
     reqs = synth_traffic(vocab, requests=requests, rate=rate,
                          prompt_len=prompt, gen=gen, temperature=0.8,
                          top_k=8, seed=seed)
-    # warm every prefill shape + the tick, so the recorded numbers measure
-    # the serving path rather than XLA compilation
+    # warm every declared chunk bucket + the tick, so the recorded numbers
+    # measure the serving path rather than XLA compilation
     eng.warm([np.asarray(r.prompt).size for r in reqs])
 
     _, m = eng.run(reqs, realtime=True)
     assert m["tick_traces"] == 1, "occupancy changes retraced the tick"
+    assert m["max_decode_stall_ticks"] <= 1, \
+        "an admission ran more than one prefill chunk between decode ticks"
     return {
         "slots": slots,
+        "prefill_chunk": chunk,
         "requests": m["requests"],
         "agg_tok_s": round(m["agg_tok_s"], 1),
         "occupancy_pct": round(100 * m["occupancy"], 1),
         "p50_latency_ms": round(1e3 * m["p50_latency_s"], 1),
         "p95_latency_ms": round(1e3 * m["p95_latency_s"], 1),
+        "ttft_p50_ms": round(1e3 * m["ttft_p50_s"], 1),
+        "ttft_p95_ms": round(1e3 * m["ttft_p95_s"], 1),
+        "max_decode_stall_ticks": m["max_decode_stall_ticks"],
         "ticks": m["ticks"],
         "tick_traces": m["tick_traces"],
+        "prefill_traces": m["prefill_traces"],
     }
 
 

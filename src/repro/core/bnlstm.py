@@ -293,17 +293,6 @@ def rnn_write_slots(state: RNNState, sub: RNNState, slots) -> RNNState:
                     pos=state.pos.at[slots].set(sub_pos))
 
 
-def rnn_reset_slots(state: RNNState, mask: Array) -> RNNState:
-    """Retire slots where `mask` (B,) is True: h/c/pos drop to zero.  The
-    pool keeps its shape — dead slots are masked in the decode step, never
-    resliced, so occupancy changes cannot retrace the jitted tick."""
-    m = mask[None, :, None]  # where, not multiply: dead-slot garbage may
-    z = jnp.zeros((), state.h.dtype)  # be non-finite and 0*inf is NaN
-    return RNNState(h=jnp.where(m, z, state.h),
-                    c=jnp.where(m, z, state.c),
-                    pos=jnp.where(mask, 0, state.pos))
-
-
 def _bn_affine(p: BNParams, s: BNState, eps: float) -> tuple[Array, Array]:
     """Frozen inference BN as (scale, shift): y = x * scale + shift."""
     inv = jax.lax.rsqrt(s.var + eps)
@@ -374,6 +363,43 @@ def _serve_x_preact(t: dict, l: int, x, dtype):
     return OPS.qmatmul(x, t["qx"]) * t["scale_x"] + t["shift_x"]
 
 
+def _serve_scan_layer(t: dict, ax_seq: Array, h0: Array, c0: Array,
+                      cell: str):
+    """One layer's serving scan — THE shared body of `rnn_prefill` and
+    `rnn_prefill_chunk`.  Both must compile this exact step with these
+    exact emitted outputs: XLA fuses (and therefore rounds) a scan body
+    differently if its outputs differ, and whole-vs-chunked prefill being
+    bit-identical depends on the shared body.  Returns (hs, cs, hl, cl):
+    the per-step h/c stacked over time (cs = None for GRU) and the final
+    carry."""
+    if cell == "lstm":
+        def step(carry, ax_t):
+            h, c = _serve_lstm_step(t, ax_t, *carry)
+            return (h, c), (h, c)
+        (hl, cl), (hs, cs) = jax.lax.scan(step, (h0, c0),
+                                          jnp.swapaxes(ax_seq, 0, 1))
+        return hs, cs, hl, cl
+
+    def step(h, ax_t):
+        h = _serve_gru_step(t, ax_t, h)
+        return h, h
+    hl, hs = jax.lax.scan(step, h0, jnp.swapaxes(ax_seq, 0, 1))
+    return hs, None, hl, c0
+
+
+def rnn_logits_last(variables: dict, state: RNNState, cfg: RNNConfig) -> Array:
+    """Next-token logits (B, vocab) from a carried state's top-layer h.
+
+    Both prefill flavours (full `rnn_prefill` and the engine's bucket-padded
+    `rnn_prefill_chunk`) sample the request's first token through THIS
+    helper, at the same (B, 1, H) matmul shape — matmul rounding depends on
+    the row count, so sharing the shape is what makes the chunked engine's
+    first token bit-identical to the sequential loop's."""
+    head = variables["params"]["head"]
+    x = state.h[-1].astype(cfg.dtype)[:, None]  # (B, 1, H)
+    return (OPS.qmatmul(x, head["ws"]) + head["bs"])[:, 0]
+
+
 def rnn_prefill(variables: dict, tokens: Array, cfg: RNNConfig,
                 state: Optional[RNNState] = None, *,
                 tables: Optional[list] = None):
@@ -381,7 +407,11 @@ def rnn_prefill(variables: dict, tokens: Array, cfg: RNNConfig,
 
     tokens: (B, T) int32.  Returns (logits (B, T, vocab), new RNNState) —
     full-sequence logits so callers can score the prompt; the serving loop
-    samples from `logits[:, -1]`."""
+    samples from `rnn_logits_last` on the returned state.
+
+    Runs `_serve_scan_layer` per layer — the body shared with
+    `rnn_prefill_chunk` — so the carried state after T tokens is
+    bit-identical whether the prompt ran whole or in chunks."""
     params = variables["params"]
     B, T = tokens.shape
     if state is None:
@@ -393,20 +423,9 @@ def rnn_prefill(variables: dict, tokens: Array, cfg: RNNConfig,
     hT, cT = [], []
     for l, t in enumerate(tables):
         ax_seq = _serve_x_preact(t, l, x_seq, cfg.dtype)  # (B, T, gH)
-        h0 = state.h[l].astype(cfg.dtype)
-        c0 = state.c[l].astype(cfg.dtype)
-        if cfg.cell == "lstm":
-            def step(carry, ax_t):
-                h, c = _serve_lstm_step(t, ax_t, *carry)
-                return (h, c), h
-            (hl, cl), hs = jax.lax.scan(step, (h0, c0),
-                                        jnp.swapaxes(ax_seq, 0, 1))
-        else:
-            def step(h, ax_t):
-                h = _serve_gru_step(t, ax_t, h)
-                return h, h
-            hl, hs = jax.lax.scan(step, h0, jnp.swapaxes(ax_seq, 0, 1))
-            cl = c0
+        hs, _, hl, cl = _serve_scan_layer(
+            t, ax_seq, state.h[l].astype(cfg.dtype),
+            state.c[l].astype(cfg.dtype), cfg.cell)
         x_seq = jnp.swapaxes(hs, 0, 1)
         hT.append(hl)
         cT.append(cl)
@@ -415,6 +434,47 @@ def rnn_prefill(variables: dict, tokens: Array, cfg: RNNConfig,
     new_state = RNNState(h=jnp.stack(hT), c=jnp.stack(cT),
                          pos=state.pos + jnp.int32(T))
     return logits, new_state
+
+
+def rnn_prefill_chunk(variables: dict, tokens: Array, cfg: RNNConfig,
+                      state: RNNState, *, n: Array,
+                      tables: Optional[list] = None):
+    """One bucket-padded prompt chunk: consume the first `n` of T tokens.
+
+    tokens: (B, T) int32 where T is a BUCKET length (static — one jit trace
+    per bucket) and `n` (traced int32) is the real token count, 1 <= n <= T.
+    The scan body is `_serve_scan_layer` — EXACTLY `rnn_prefill`'s, so XLA
+    fuses and rounds identically; the pad tokens simply run past the end
+    and the state at token n-1 is picked out of the per-step outputs.
+    Pad steps feed on real outputs but their own outputs are discarded, so
+    the returned state and logits are bit-identical to running the unpadded
+    slice through `rnn_prefill`, with a trace count that depends on the
+    bucket set, not on prompt lengths.  The continuous-batching engine
+    resumes a prompt across chunks with this; the carried `state` makes it
+    O(1) per chunk regardless of how much prompt came before."""
+    B, T = tokens.shape
+    if tables is None:
+        tables = rnn_decode_tables(variables, cfg)
+    n = jnp.asarray(n, jnp.int32)
+
+    x_seq = tokens
+    hT, cT = [], []
+    for l, t in enumerate(tables):
+        ax_seq = _serve_x_preact(t, l, x_seq, cfg.dtype)  # (B, T, gH)
+        hs, cs, _, carry_c = _serve_scan_layer(
+            t, ax_seq, state.h[l].astype(cfg.dtype),
+            state.c[l].astype(cfg.dtype), cfg.cell)
+        hl = jnp.take(hs, n - 1, axis=0)
+        # GRU carries no cell: _serve_scan_layer returns the c0 it was given
+        cl = jnp.take(cs, n - 1, axis=0) if cs is not None else carry_c
+        x_seq = jnp.swapaxes(hs, 0, 1)
+        hT.append(hl)
+        cT.append(cl)
+
+    new_state = RNNState(h=jnp.stack(hT), c=jnp.stack(cT), pos=state.pos + n)
+    # first-token logits through the SAME (B, 1, H) head shape the
+    # sequential loop samples from (rnn_logits_last) — bit-for-bit equal
+    return rnn_logits_last(variables, new_state, cfg), new_state
 
 
 def rnn_decode_step(variables: dict, tok: Array, cfg: RNNConfig,

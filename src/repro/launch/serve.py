@@ -120,27 +120,34 @@ def synth_traffic(vocab: int, *, requests: int, rate: float, prompt_len: int,
 def run_traffic(cfg, rt, args) -> dict:
     """Replay a Poisson workload through the continuous-batching engine."""
     ctx = args.prompt_len + args.gen
-    eng = ServeEngine(rt, cfg.vocab, slots=args.slots, max_context=ctx)
+    eng = ServeEngine(rt, cfg.vocab, slots=args.slots, max_context=ctx,
+                      prefill_chunk=args.prefill_chunk)
     reqs = synth_traffic(cfg.vocab, requests=args.requests, rate=args.rate,
                          prompt_len=args.prompt_len, gen=args.gen,
                          temperature=args.temperature, top_k=args.top_k,
                          seed=args.seed)
-    # warm the tick and every distinct prompt-length prefill before the
+    # warm the tick and every declared prefill chunk bucket before the
     # clock starts, so latency percentiles measure serving, not XLA
-    # compilation (prefill traces per prompt length; the tick never does)
+    # compilation (one prefill trace per bucket; the tick never retraces)
     eng.warm([np.asarray(r.prompt).size for r in reqs])
     comps, m = eng.run(reqs, realtime=True)
     print(f"traffic: {m['requests']} requests over {m['wall_s']:.2f}s "
-          f"({args.rate:.1f} req/s offered, {args.slots} slots)")
+          f"({args.rate:.1f} req/s offered, {args.slots} slots, "
+          f"prefill chunk {args.prefill_chunk})")
     print(f"aggregate decode: {m['agg_tok_s']:.1f} tok/s  "
           f"occupancy: {100 * m['occupancy']:.0f}%  "
-          f"ticks: {m['ticks']} (traces: {m['tick_traces']})")
+          f"ticks: {m['ticks']} (traces: {m['tick_traces']}, "
+          f"prefill traces: {m['prefill_traces']})")
     print(f"latency: p50 {m['p50_latency_s']*1e3:.0f} ms  "
-          f"p95 {m['p95_latency_s']*1e3:.0f} ms")
+          f"p95 {m['p95_latency_s']*1e3:.0f} ms  |  "
+          f"ttft: p50 {m['ttft_p50_s']*1e3:.0f} ms  "
+          f"p95 {m['ttft_p95_s']*1e3:.0f} ms  "
+          f"(max decode stall: {m['max_decode_stall_ticks']} chunk)")
     done = sorted(comps, key=lambda c: c.rid)[:4]
     for c in done:
         print(f"  req {c.rid}: prompt {c.prompt_len} -> {len(c.tokens)} toks "
-              f"({c.finished}), latency {c.latency_s*1e3:.0f} ms")
+              f"({c.finished}), ttft {c.ttft_s*1e3:.0f} ms, "
+              f"latency {c.latency_s*1e3:.0f} ms")
     return m
 
 
@@ -167,6 +174,10 @@ def main(argv=None):
                     help="workload size (--traffic)")
     ap.add_argument("--slots", type=int, default=4,
                     help="engine slot-pool size (--traffic)")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="in-slot prefill chunk size: at most one chunk "
+                         "runs between decode ticks, so long prompts never "
+                         "stall live decodes (--traffic)")
     args = ap.parse_args(argv)
 
     key = jax.random.PRNGKey(args.seed)

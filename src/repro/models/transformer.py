@@ -182,8 +182,10 @@ def _attn_full(p, x, cfg, kind, positions, xsrc):
     return x + y, aux
 
 
-def _self_attn_cached(p_attn, h, cfg, cache: AttnCache, *, window: int):
-    """h: (B, S, d) new tokens; attends over cache+new.  Returns (o, cache)."""
+def _self_attn_cached(p_attn, h, cfg, cache: AttnCache, *, window: int,
+                      live=None):
+    """h: (B, S, d) new tokens; attends over cache+new.  Returns (o, cache).
+    `live` (B,) freezes dead continuous-batching rows' cache bytes/pos."""
     q = L.attn_q(p_attn, h, cfg)
     k_new, v_new = L.attn_kv(p_attn, h, cfg)
     S = h.shape[1]
@@ -193,7 +195,7 @@ def _self_attn_cached(p_attn, h, cfg, cache: AttnCache, *, window: int):
     positions = cache.pos[:, None] + ar if cache.pos.ndim else cache.pos + ar
     q = L.rope(q, positions, cfg.rope_theta)
     k_new = L.rope(k_new, positions, cfg.rope_theta)
-    cache = cache_update(cache, k_new, v_new)
+    cache = cache_update(cache, k_new, v_new, live)
     kv_pos = cache_positions(cache)
     # Match q's sharding to the cache policy: heads over 'model' only when
     # the KV heads themselves are head-sharded; with a LENGTH-sharded cache
@@ -210,13 +212,15 @@ def _self_attn_cached(p_attn, h, cfg, cache: AttnCache, *, window: int):
     return o, cache
 
 
-def _attn_cached(p, x, cfg, kind, cache, xcache: Optional[CrossCache]):
+def _attn_cached(p, x, cfg, kind, cache, xcache: Optional[CrossCache],
+                 live=None):
     """Prefill/decode attention block; returns (x, new_cache, new_xcache)."""
     window = cfg.window if (kind == "local" or cfg.swa_all) else 0
     if cfg.parallel_block and kind in ("full", "global", "self", "local",
                                        "shared"):
         h = L.rms_norm(x, p["norm1"])
-        o, cache = _self_attn_cached(p["attn"], h, cfg, cache, window=window)
+        o, cache = _self_attn_cached(p["attn"], h, cfg, cache, window=window,
+                                     live=live)
         o = L.attn_out(p["attn"], o, cfg)
         y, aux = _mlp_or_moe(p, h, cfg, no_drop=x.shape[1] == 1)
         return x + o + y, cache, xcache, aux
@@ -226,14 +230,16 @@ def _attn_cached(p, x, cfg, kind, cache, xcache: Optional[CrossCache]):
         o = L.attention(q, xcache.k, xcache.v, causal=False)
         x = x + L.attn_out(p["attn"], o, cfg, cross=True)
     elif kind == "selfcross":
-        o, cache = _self_attn_cached(p["attn"], h, cfg, cache, window=0)
+        o, cache = _self_attn_cached(p["attn"], h, cfg, cache, window=0,
+                                     live=live)
         x = x + L.attn_out(p["attn"], o, cfg)
         hc = L.rms_norm(x, p["normc"])
         q = L.attn_q(p["xattn"], hc, cfg)
         o = L.attention(q, xcache.k, xcache.v, causal=False)
         x = x + L.attn_out(p["xattn"], o, cfg, cross=True)
     else:
-        o, cache = _self_attn_cached(p["attn"], h, cfg, cache, window=window)
+        o, cache = _self_attn_cached(p["attn"], h, cfg, cache, window=window,
+                                     live=live)
         x = x + L.attn_out(p["attn"], o, cfg)
     h = L.rms_norm(x, p["norm2"])
     y, aux = _mlp_or_moe(p, h, cfg, no_drop=x.shape[1] == 1)
@@ -427,18 +433,36 @@ def forward(params, tokens: Array, cfg, *, training: bool = False,
 # ---------------------------------------------------------------------------
 
 
+def _freeze_dead(new, old, live):
+    """Select per-row between a recurrent state update and the previous
+    state: dead continuous-batching rows (live=False) keep every leaf —
+    S-matrices, conv tails, shift buffers, pos — bit-for-bit.  The leaf's
+    batch axis is axis 0 (RWKVState/SSMState are built per layer)."""
+    def sel(n, o):
+        m = live.reshape(live.shape + (1,) * (n.ndim - 1))
+        return jnp.where(m, n, o)
+    return jax.tree.map(sel, new, old)
+
+
 def _step_cached(qparams, x, caches, cfg, *, decode: bool,
-                 xsrc: Optional[Array]) -> Tuple[Array, dict, Array]:
-    """Run all layers over new tokens x (B,S,d) against caches."""
+                 xsrc: Optional[Array], live=None) -> Tuple[Array, dict, Array]:
+    """Run all layers over new tokens x (B,S,d) against caches.  `live`
+    (B,) bool (decode tick of the continuous-batching engine) freezes dead
+    rows' cache writes and recurrent states — a dead row may be a slot
+    MID-PREFILL, whose state the zombie decode must not touch."""
     pat, rep, tail = expand_pattern(cfg)
 
     def apply_kind(p, x, kind, cache):
         aux0 = jnp.zeros((), jnp.float32)
         if kind == "mamba":
             y, st = _mamba_block(p, x, cfg, cache["ssm"], decode)
+            if live is not None:
+                st = _freeze_dead(st, cache["ssm"], live)
             return y, {"ssm": st}, aux0
         if kind == "rwkv":
             y, st = _rwkv_block(p, x, cfg, cache["rwkv"], decode)
+            if live is not None:
+                st = _freeze_dead(st, cache["rwkv"], live)
             return y, {"rwkv": st}, aux0
         pp = qparams["shared"] if kind == "shared" else p
         kk = "full" if kind == "shared" else kind
@@ -448,7 +472,8 @@ def _step_cached(qparams, x, caches, cfg, *, decode: bool,
             name = "xattn" if kk == "selfcross" else "attn"
             k, v = L.attn_kv(pp[name], xsrc, cfg)
             xc = CrossCache(k=k, v=v)
-        y, ac, xc, aux = _attn_cached(pp, x, cfg, kk, cache.get("attn"), xc)
+        y, ac, xc, aux = _attn_cached(pp, x, cfg, kk, cache.get("attn"), xc,
+                                      live)
         out = {}
         if ac is not None:
             out["attn"] = ac
@@ -496,10 +521,29 @@ def _serve_quant(params, cfg):
     return quantize_tree(params, spec, None, compute_dtype=_dt(cfg))
 
 
+def _rewind_pad(caches: dict, pad) -> dict:
+    """Drop `pad` bucket-padding tokens back off every attention cache's
+    per-slot pos.  The pad tokens' k/v bytes stay where they were written,
+    but `cache_positions` derives validity from pos alone, so they read as
+    unwritten and the next chunk / decode step overwrites them.  Only
+    meaningful for runtimes whose caches are pure attention (the engine
+    gates bucket padding on that)."""
+    is_c = lambda c: isinstance(c, AttnCache)
+    return jax.tree.map(lambda c: c._replace(pos=c.pos - pad) if is_c(c) else c,
+                        caches, is_leaf=is_c)
+
+
 def prefill(params, tokens: Array, caches: dict, cfg, *,
             img: Optional[Array] = None,
-            enc_frames: Optional[Array] = None) -> Tuple[Array, dict]:
-    """Process the prompt, fill caches.  Returns (last-token logits, caches)."""
+            enc_frames: Optional[Array] = None,
+            n: Optional[Array] = None) -> Tuple[Array, dict]:
+    """Process the prompt, fill caches.  Returns (last-token logits, caches).
+
+    `n` (traced int32) marks the first n of tokens as real and the tail as
+    bucket padding: the returned logits are taken at position n-1 and the
+    attention caches' pos is rewound by the pad count, so a fixed bucket
+    length serves every real chunk length with one jit trace (chunked
+    in-slot prefill, DESIGN.md §8)."""
     qparams = _serve_quant(params, cfg)
     xsrc = None
     if cfg.family == "audio":
@@ -508,17 +552,29 @@ def prefill(params, tokens: Array, caches: dict, cfg, *,
         xsrc = img.astype(_dt(cfg))
     x = _embed(qparams, tokens, cfg)
     x, caches, _ = _step_cached(qparams, x, caches, cfg, decode=False, xsrc=xsrc)
-    x = L.rms_norm(x[:, -1:], qparams["final_norm"])
+    if n is None:
+        x = x[:, -1:]
+    else:
+        n = jnp.asarray(n, jnp.int32)
+        x = jax.lax.dynamic_slice_in_dim(x, n - 1, 1, axis=1)
+        caches = _rewind_pad(caches, tokens.shape[1] - n)
+    x = L.rms_norm(x, qparams["final_norm"])
     return _head(qparams, x, cfg)[:, 0], caches
 
 
-def decode_step(params, token: Array, caches: dict, cfg) -> Tuple[Array, dict]:
-    """One decode step.  token: (B,) or (B,1) int32 -> (logits (B, Vp), caches)."""
+def decode_step(params, token: Array, caches: dict, cfg,
+                live: Optional[Array] = None) -> Tuple[Array, dict]:
+    """One decode step.  token: (B,) or (B,1) int32 -> (logits (B, Vp), caches).
+
+    `live` (B,) bool is the continuous-batching engine's occupancy mask:
+    dead rows' caches and recurrent states stay bit-for-bit frozen (their
+    logits are garbage and never sampled)."""
     if token.ndim == 1:
         token = token[:, None]
     qparams = _serve_quant(params, cfg)
     x = _embed(qparams, token, cfg)
-    x, caches, _ = _step_cached(qparams, x, caches, cfg, decode=True, xsrc=None)
+    x, caches, _ = _step_cached(qparams, x, caches, cfg, decode=True,
+                                xsrc=None, live=live)
     x = L.rms_norm(x, qparams["final_norm"])
     return _head(qparams, x, cfg)[:, 0], caches
 

@@ -30,6 +30,17 @@ def current_compute_rules():
     return getattr(_state, "compute_rules", None)
 
 
+def abstract_mesh(sizes: Sequence[int], names: Sequence[str]):
+    """Device-free mesh for spec-building and tests, across jax versions:
+    jax >= 0.5 takes AbstractMesh(axis_sizes, axis_names); 0.4.x takes one
+    tuple of (name, size) pairs.  Same OrderedDict shape either way."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(sizes), tuple(names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, sizes)))
+
+
 @contextlib.contextmanager
 def use_mesh(mesh: Optional[jax.sharding.Mesh], param_rules=None,
              compute_rules=None):

@@ -1,22 +1,30 @@
-"""Continuous-batching serve engine (DESIGN.md §7).
+"""Continuous-batching serve engine (DESIGN.md §7-§8).
 
 `ServeEngine` owns a fixed pool of B slots over any serving runtime
 (BN-LSTM/GRU, RWKV6, Mamba2-hybrid, attention archs) and turns the lockstep
 prefill→decode loop into mixed-length traffic serving:
 
-  * requests are ADMITTED from a queue as slots free up: the new request is
-    prefilled alone (batch 1, pool-shaped state) and spliced into its slot —
-    for the RNN family that is two (L, H) row copies (the O(1) recurrent
-    state is exactly what makes admission trivial), for attention archs a
-    per-slot KV-row insert plus a per-slot position reset;
+  * requests are ADMITTED from a queue as slots free up — admission is pure
+    bookkeeping: the prompt is split into fixed-size, bucket-padded CHUNKS
+    and the slot enters a `prefilling` phase;
+  * each scheduler iteration runs AT MOST ONE prefill chunk, straight into
+    the admitted slot (gather the slot row, run the resumable chunk, write
+    the row back), interleaved with the batched decode tick — a long prompt
+    can never stall live decodes for more than one chunk's worth of work
+    (Sarathi/SplitFuse-style, adapted to the mask-don't-reshape pool);
   * every tick runs ONE batched `decode_step` across all B slots with dead
     slots MASKED, never resliced — the tick's operand shapes are
     occupancy-independent, so jit traces the decode path exactly once and
     admit/retire between ticks cannot retrace it (asserted in tests);
+    prefilling slots are dead for the tick, and the runtimes freeze dead
+    rows' state bit-for-bit (a dead row may be mid-prefill);
+  * a request's FIRST token is sampled when its last chunk lands —
+    `Completion.t_first` is the real first-token time, not the admission
+    time — then the slot turns live and decodes;
   * slots RETIRE on EOS or per-request max-tokens and are immediately
-    reusable; freed slots are scrubbed in one batched reset per tick
-    (`rnn_reset_slots` zeroes h/c, `cache_reset_slots` drops the per-slot
-    cache pos so stale KV reads as unwritten).
+    reusable; freed slots are scrubbed in one batched shape-aware reset
+    (recurrent leaves and positions to zero, attention KV masked in place)
+    because the next occupant's prefill RESUMES from the slot row.
 
 Sampling is per-slot vectorized (serve/sampler.sample_slots): each slot
 carries its own temperature / top-k / PRNG key chain, and a slot's draws are
@@ -28,7 +36,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Any, List, Optional, Sequence
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -63,8 +71,9 @@ class Completion:
     finished: str                # 'length' | 'eos'
     slot: int
     t_submit: float              # engine-relative seconds
-    t_admit: float
-    t_first: float               # first token sampled (== admit: prefill samples)
+    t_admit: float               # slot allocated; prefill starts after this
+    t_first: float               # the FIRST token was actually sampled (the
+                                 # prompt's last chunk landed) — real TTFT
     t_done: float
 
     @property
@@ -75,6 +84,10 @@ class Completion:
     def queue_s(self) -> float:
         return self.t_admit - self.t_submit
 
+    @property
+    def ttft_s(self) -> float:
+        return self.t_first - self.t_submit
+
 
 @dataclasses.dataclass
 class _Active:
@@ -83,6 +96,8 @@ class _Active:
     tokens: List[int]
     t_submit: float
     t_admit: float
+    t_first: Optional[float]            # stamped when the first token samples
+    chunks: Deque[Tuple[np.ndarray, int]]  # remaining (padded chunk, n real)
 
 
 # ---------------------------------------------------------------------------
@@ -109,6 +124,55 @@ def tree_write_slot(pool, sub, slot):
         pool, sub, is_leaf=is_cache)
 
 
+def tree_gather_slot(pool, ref, slot):
+    """Read row `slot` of every pool leaf as a batch-1 state pytree — the
+    exact inverse of `tree_write_slot`, and the read half of in-slot chunked
+    prefill (gather the slot, run one chunk, write it back).  `ref` is a
+    batch-1 template of the pool (arrays or ShapeDtypeStructs); its static
+    shapes recover the slot axis per leaf."""
+    from repro.serve.kvcache import AttnCache, cache_gather_slot, read_row
+
+    is_cache = lambda x: isinstance(x, AttnCache)
+    return jax.tree.map(
+        lambda p, r: (cache_gather_slot(p, r, slot) if is_cache(p)
+                      else read_row(p, r.shape, slot)),
+        pool, ref, is_leaf=is_cache)
+
+
+def tree_reset_slots(pool, ref, mask):
+    """Scrub slots where `mask` (B,) is True, shape-aware via the batch-1
+    template `ref`: recurrent leaves (h/c, S-matrices, conv tails, shift
+    buffers) and every position counter drop to ZERO along the recovered
+    slot axis; AttnCache nodes keep their KV bytes and reset only pos
+    (stale entries read as unwritten — mask-don't-reshape).  A freed slot
+    must read exactly like a fresh one: the next occupant's chunked prefill
+    RESUMES from the slot row instead of splicing in a fresh state."""
+    from repro.serve.kvcache import (AttnCache, _slot_axis, cache_reset_slots)
+
+    is_cache = lambda x: isinstance(x, AttnCache)
+
+    def scrub(p, r):
+        if is_cache(p):
+            return cache_reset_slots(p, mask)
+        ax = _slot_axis(p.shape, r.shape)
+        z = jnp.zeros((), p.dtype)
+        if ax is None:  # 1-slot pool: the whole leaf belongs to slot 0
+            return jnp.where(mask[0], z, p)
+        m = mask.reshape((1,) * ax + (-1,) + (1,) * (p.ndim - ax - 1))
+        return jnp.where(m, z, p)
+
+    return jax.tree.map(scrub, pool, ref, is_leaf=is_cache)
+
+
+def _bucket(n: int, cap: int) -> int:
+    """Smallest power-of-two >= n, capped at the chunk size — the static
+    prefill shapes, so trace count is O(log chunk), not O(#prompt lengths)."""
+    b = 1
+    while b < n and b < cap:
+        b <<= 1
+    return min(b, cap)
+
+
 # ---------------------------------------------------------------------------
 # the engine
 # ---------------------------------------------------------------------------
@@ -117,24 +181,31 @@ def tree_write_slot(pool, sub, slot):
 class ServeEngine:
     """Slotted continuous-batching scheduler over one serving runtime.
 
-    eng = ServeEngine(rt, vocab, slots=8, max_context=512)
+    eng = ServeEngine(rt, vocab, slots=8, max_context=512, prefill_chunk=32)
     completions, metrics = eng.run(requests)
 
-    Invariants (DESIGN.md §7):
+    Invariants (DESIGN.md §7-§8):
       * mask-don't-reshape — the pool state, the token/key/temperature
         arrays and therefore the jitted tick keep shape (B, ...) forever;
         occupancy lives in a boolean mask;
       * one trace — `tick_traces` counts jit traces of the decode tick and
         stays at 1 across arbitrary admit/retire interleavings;
+        `prefill_traces` counts chunk-prefill traces and is bounded by the
+        declared bucket set (warm() compiles them all up front);
+      * no head-of-line blocking — at most ONE prefill chunk runs between
+        decode ticks, so an admission never stalls live decodes for more
+        than one chunk of work (`max_decode_stall_ticks` <= 1);
       * per-request determinism — a request's token stream depends only on
-        (prompt, seed, sampling params), never on which slot it landed in
-        or what shared the batch.
+        (prompt, seed, sampling params), never on which slot it landed in,
+        what shared the batch, or how its prompt was chunked.
     """
 
     def __init__(self, rt, vocab: int, *, slots: int, max_context: int,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None, prefill_chunk: int = 32):
         if slots < 1:
             raise ValueError("need at least one slot")
+        if prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
         if getattr(rt, "extras", None):
             raise NotImplementedError(
                 "continuous batching over cross-attention runtimes (vlm/"
@@ -145,9 +216,20 @@ class ServeEngine:
         self.n_slots = int(slots)
         self.max_context = int(max_context)
         self.eos_id = eos_id
+        self.prefill_chunk = int(prefill_chunk)
+        # how the runtime lets prompts be split (serve/recurrent.py):
+        # 'token' granularity chunks anywhere; 'whole' archs (MoE capacity
+        # competition, rwkv/mamba internal scan chunking) prefill the prompt
+        # as one in-slot chunk.  pad_buckets = padded tails are exact.
+        self._granularity = getattr(rt, "chunk_granularity", "whole")
+        self._pad = bool(getattr(rt, "pad_buckets", False))
 
         self.pool = rt.init_state(self.n_slots, self.max_context,
                                   per_slot=True)
+        # batch-1 template: fixes the slot axis of every pool leaf for the
+        # gather/reset surgery (shapes only — no arrays are materialized)
+        self._ref = jax.eval_shape(
+            lambda: rt.init_state(1, self.max_context, per_slot=True))
         B = self.n_slots
         self._pending = jnp.zeros((B,), jnp.int32)   # next token to feed
         self._live = jnp.zeros((B,), bool)
@@ -156,10 +238,12 @@ class ServeEngine:
         self._topk = jnp.zeros((B,), jnp.int32)
         self._live_host = np.zeros(B, bool)
         self._active: List[Optional[_Active]] = [None] * B
+        self._prefill_q: Deque[int] = deque()   # slots mid-prefill, FIFO
         self._rid = 0
 
         self.ticks = 0
-        self.tick_traces = 0      # python counter bumped at TRACE time only
+        self.tick_traces = 0      # python counters bumped at TRACE time only
+        self.prefill_traces = 0
         self._occupancy_sum = 0.0
 
         def tick(pool, pending, live, keys, temp, topk):
@@ -174,7 +258,7 @@ class ServeEngine:
             keys = jnp.where(live[:, None], ks[:, 0], keys)
             return pool, nxt, keys
 
-        # the pool is dead the moment the tick/write/reset returns its
+        # the pool is dead the moment the tick/prefill/reset returns its
         # successor, so donate it (and the pending/key chains) — without
         # donation every tick would COPY all B KV caches.  CPU ignores
         # donation with a warning, so only ask off-CPU.
@@ -190,14 +274,26 @@ class ServeEngine:
             return tok, ks[0]
 
         self._admit_sample = jax.jit(admit_sample)
+
         write = rt.write_slots if hasattr(rt, "write_slots") else tree_write_slot
-        self._write = jax.jit(write, donate_argnums=() if cpu else (0,))
-        # retire-time slot scrub: RNN pools zero the slot's h/c
-        # (bnlstm.rnn_reset_slots); attention pools drop the slot's per-slot
-        # cache pos so stale KV is masked (kvcache.cache_reset_slots)
-        self._reset = (jax.jit(rt.reset_slots,
-                               donate_argnums=() if cpu else (0,))
-                       if hasattr(rt, "reset_slots") else None)
+
+        def prefill_slot(pool, tokens, n, slot):
+            # in-slot chunked prefill: the slot row IS the session state.
+            # Retraces once per bucket length (tokens' static shape); slot
+            # and n are traced, so one trace serves every admission.
+            self.prefill_traces += 1
+            sub = tree_gather_slot(pool, self._ref, slot)
+            logits, sub = rt.prefill_chunk(tokens, sub, n)
+            return logits, write(pool, sub, slot)
+
+        self._prefill_slot = jax.jit(
+            prefill_slot, donate_argnums=() if cpu else (0,))
+        # retire-time slot scrub, shape-aware: recurrent leaves + positions
+        # to zero, attention KV masked in place — the freed row must read
+        # as fresh because the next prefill resumes from it
+        self._reset = jax.jit(
+            lambda pool, mask: tree_reset_slots(pool, self._ref, mask),
+            donate_argnums=() if cpu else (0,))
 
     # -- admission ----------------------------------------------------------
 
@@ -207,24 +303,67 @@ class ServeEngine:
             raise ValueError(f"request {req.rid}: empty prompt")
         if req.max_tokens < 1:
             raise ValueError(f"request {req.rid}: max_tokens must be >= 1 "
-                             f"(got {req.max_tokens}) — admission always "
-                             f"samples the first token from the prefill")
+                             f"(got {req.max_tokens}) — the last prompt "
+                             f"chunk always samples the first token")
         if size + req.max_tokens > self.max_context:
             raise ValueError(
                 f"request {req.rid}: needs {size}+{req.max_tokens} tokens; "
                 f"engine provisioned max_context={self.max_context}")
 
+    def _chunk_plan(self, size: int) -> List[Tuple[int, int]]:
+        """Split a prompt of `size` tokens into (bucket_len, n_real) chunks.
+        'token' granularity: full `prefill_chunk` chunks plus a tail,
+        bucket-padded to a power of two when the runtime supports exact
+        padding.  'whole' granularity: the prompt is one chunk."""
+        C = self.prefill_chunk
+        if self._granularity == "whole":
+            return [(size, size)]
+        plan = [(C, C)] * (size // C)
+        r = size % C
+        if r:
+            plan.append((_bucket(r, C), r) if self._pad else (r, r))
+        return plan
+
+    def declared_buckets(self, prompt_lens: Sequence[int] = ()) -> List[int]:
+        """The static chunk lengths `warm()` compiles.  Bucket-padding
+        runtimes declare the traffic-independent power-of-two set — after
+        warming it, NO workload can trace a new prefill shape.  Exact-length
+        runtimes derive the set from the prompt lengths they are told about
+        (plus the full chunk)."""
+        bs = {1}  # warm()'s throwaway request prefills a 1-token prompt
+        lens = {int(l) for l in prompt_lens if int(l) > 0}
+        if self._granularity == "whole":
+            bs |= lens
+        elif self._pad:
+            C = self.prefill_chunk
+            bs.add(C)
+            b = 1
+            while b < C:
+                bs.add(b)
+                b <<= 1
+        else:
+            for l in lens:
+                bs |= {Lb for Lb, _ in self._chunk_plan(l)}
+        return sorted(bs)
+
     def warm(self, prompt_lens: Sequence[int] = ()) -> None:
-        """Compile outside the measured run: the tick plus one prefill per
-        distinct prompt length (prefill traces per length; the tick never
-        retraces).  Shared by the --traffic launcher and the benchmark so
-        both measure the same warmed serving path."""
-        for L in sorted({int(l) for l in prompt_lens if l > 0}):
-            st = self.rt.init_state(1, self.max_context, per_slot=True)
-            jax.block_until_ready(
-                self.rt.prefill(jnp.zeros((1, L), jnp.int32), st)[0])
-        # a throwaway request exercises admit + the tick and leaves every
-        # slot idle again; max_tokens respects tiny max_context settings
+        """Compile outside the measured run: one prefill trace per declared
+        chunk bucket, plus the tick and the first-token sampler.  After
+        this, a measured `run()` performs ZERO new traces (asserted in
+        tests via the prefill_traces/tick_traces counters).  Shared by the
+        --traffic launcher and the benchmark so both measure the same
+        warmed serving path."""
+        for Lb in self.declared_buckets(prompt_lens):
+            _, self.pool = self._prefill_slot(
+                self.pool, jnp.zeros((1, Lb), jnp.int32),
+                jnp.int32(Lb), jnp.int32(0))
+        # the warm prefills ran junk through slot 0 — scrub it so the pool
+        # is indistinguishable from fresh before any real admission
+        mask = np.zeros(self.n_slots, bool)
+        mask[0] = True
+        self.pool = self._reset(self.pool, jnp.asarray(mask))
+        # a throwaway request exercises admit + sample + the tick and
+        # leaves every slot idle again; max_tokens respects tiny contexts
         n = min(2, self.max_context - 1)
         if n >= 1:
             self.run([Request(prompt=np.zeros(1, np.int32), max_tokens=n,
@@ -232,35 +371,64 @@ class ServeEngine:
                      realtime=False)
 
     def _free_slot(self) -> Optional[int]:
-        idle = np.flatnonzero(~self._live_host)
+        # a slot is busy while PREFILLING too (live only after its first
+        # token), so occupancy is "has an _Active", not the decode mask
+        idle = np.flatnonzero(np.array([a is None for a in self._active]))
         return int(idle[0]) if idle.size else None
 
-    def _admit(self, req: Request, slot: int, now: float) -> Optional[Completion]:
+    def _admit(self, req: Request, slot: int, now: float) -> None:
+        """Pure bookkeeping: number the admission, split the prompt into
+        bucket-padded chunks, queue the slot for in-slot prefill.  No
+        device work happens here — that is the whole point (chunks run one
+        per scheduler iteration, interleaved with the decode tick)."""
         prompt = np.asarray(req.prompt, np.int32).reshape(-1)
         rid = self._rid if req.rid is None else req.rid
         self._rid = max(self._rid, rid) + 1
+        chunks: Deque[Tuple[np.ndarray, int]] = deque()
+        off = 0
+        for Lb, n in self._chunk_plan(prompt.size):
+            c = np.zeros(Lb, np.int32)
+            c[:n] = prompt[off:off + n]
+            off += n
+            chunks.append((c, n))
+        self._active[slot] = _Active(
+            req=req, rid=rid, tokens=[], t_submit=req.arrival_s,
+            t_admit=now, t_first=None, chunks=chunks)
+        self._prefill_q.append(slot)
 
-        sub = self.rt.init_state(1, self.max_context, per_slot=True)
-        logits, sub = self.rt.prefill(jnp.asarray(prompt)[None], sub)
+    def _prefill_step(self, t0: float):
+        """Run ONE chunk of the oldest prefilling slot.  When the last
+        chunk lands, sample the request's first token (stamping the real
+        `t_first`) and either turn the slot live or — max_tokens == 1 /
+        EOS on the first token — complete it immediately.  Returns
+        (n_sampled, completion, retired_slot)."""
+        slot = self._prefill_q[0]
+        act = self._active[slot]
+        chunk, n = act.chunks.popleft()
+        logits, self.pool = self._prefill_slot(
+            self.pool, jnp.asarray(chunk)[None], jnp.int32(n),
+            jnp.int32(slot))
+        if act.chunks:
+            return 0, None, None
+        self._prefill_q.popleft()
+        req = act.req
         tok0, key = self._admit_sample(
             logits, jax.random.PRNGKey(req.seed),
             jnp.float32(req.temperature), jnp.int32(req.top_k))
-        self.pool = self._write(self.pool, sub, slot)
+        act.tokens.append(int(tok0))
+        act.t_first = time.perf_counter() - t0
+        if (req.max_tokens <= 1
+                or (self.eos_id is not None and act.tokens[0] == self.eos_id)):
+            comp = self._completion(act, slot, act.t_first)
+            self._active[slot] = None
+            return 1, comp, slot
         self._pending = self._pending.at[slot].set(tok0)
         self._keys = self._keys.at[slot].set(key)
         self._temp = self._temp.at[slot].set(req.temperature)
         self._topk = self._topk.at[slot].set(req.top_k)
-
-        act = _Active(req=req, rid=rid, tokens=[int(tok0)],
-                      t_submit=req.arrival_s, t_admit=now)
-        done = (req.max_tokens <= 1
-                or (self.eos_id is not None and act.tokens[0] == self.eos_id))
-        if done:
-            return self._completion(act, slot, now)
-        self._active[slot] = act
         self._live_host[slot] = True
         self._live = self._live.at[slot].set(True)
-        return None
+        return 1, None, None
 
     def _completion(self, act: _Active, slot: int, now: float) -> Completion:
         hit_eos = (self.eos_id is not None and act.tokens
@@ -270,7 +438,8 @@ class ServeEngine:
             prompt_len=int(np.asarray(act.req.prompt).size),
             finished="eos" if hit_eos else "length", slot=slot,
             t_submit=act.t_submit, t_admit=act.t_admit,
-            t_first=act.t_admit, t_done=now)
+            t_first=act.t_first if act.t_first is not None else act.t_admit,
+            t_done=now)
 
     def _retire(self, slot: int) -> None:
         self._active[slot] = None
@@ -293,8 +462,13 @@ class ServeEngine:
         t0 = time.perf_counter()
         gen_tokens = 0
         ticks0, occ0 = self.ticks, self._occupancy_sum  # per-run deltas
+        # decode-stall accounting: chunks an admission ran since the last
+        # decode tick while live decodes were waiting.  The scheduler's
+        # contract is that this never exceeds ONE chunk per admission.
+        stall_pending: Dict[int, int] = {}
+        stall_max = 0
 
-        while queue or self._live_host.any():
+        while queue or self._prefill_q or self._live_host.any():
             now = time.perf_counter() - t0
             # admit while there is traffic that has arrived and a free slot
             while queue and (not realtime or queue[0].arrival_s <= now):
@@ -302,14 +476,25 @@ class ServeEngine:
                 if slot is None:
                     break
                 req = queue.popleft()
-                now = time.perf_counter() - t0
-                done = self._admit(req, slot, now)
-                gen_tokens += 1  # prefill samples the request's first token
-                if done is not None:
-                    completions.append(done)
+                self._admit(req, slot, time.perf_counter() - t0)
+
+            retired = np.zeros(self.n_slots, bool)
+
+            # at most ONE prefill chunk per iteration, before the tick
+            if self._prefill_q:
+                rid = self._active[self._prefill_q[0]].rid
+                if self._live_host.any():
+                    stall_pending[rid] = stall_pending.get(rid, 0) + 1
+                sampled, comp, slot = self._prefill_step(t0)
+                gen_tokens += sampled
+                if comp is not None:
+                    completions.append(comp)
+                    retired[slot] = True
 
             if not self._live_host.any():
-                if queue and realtime:
+                if retired.any():
+                    self.pool = self._reset(self.pool, jnp.asarray(retired))
+                if not self._prefill_q and queue and realtime:
                     # idle until the next arrival
                     wait = queue[0].arrival_s - (time.perf_counter() - t0)
                     if wait > 0:
@@ -320,15 +505,20 @@ class ServeEngine:
                 self.pool, self._pending, self._live, self._keys,
                 self._temp, self._topk)
             self.ticks += 1
+            if stall_pending:
+                stall_max = max(stall_max, max(stall_pending.values()))
+                stall_pending.clear()
             n_live = int(self._live_host.sum())
-            self._occupancy_sum += n_live / self.n_slots
+            # a prefilling slot is BUSY (it cannot be admitted into), so
+            # occupancy counts it — same "slot is taken" meaning as before
+            # chunked prefill, when admission held the slot synchronously
+            self._occupancy_sum += (n_live + len(self._prefill_q)) / self.n_slots
             gen_tokens += n_live
 
             # one small device->host transfer per tick: the scheduler needs
             # the sampled ids to detect EOS / quota and to free slots
             toks = np.asarray(self._pending)
             now = time.perf_counter() - t0
-            retired = np.zeros(self.n_slots, bool)
             for slot in np.flatnonzero(self._live_host):
                 act = self._active[slot]
                 act.tokens.append(int(toks[slot]))
@@ -338,25 +528,35 @@ class ServeEngine:
                     completions.append(self._completion(act, int(slot), now))
                     self._retire(int(slot))
                     retired[slot] = True
-            if retired.any() and self._reset is not None:
-                # scrub the freed slots in ONE batched call (rnn_reset_slots
-                # / cache_reset_slots): zombie rows carry no stale state
+            if retired.any():
+                # scrub the freed slots in ONE batched shape-aware reset:
+                # the next occupant prefills IN the slot, so it must read
+                # exactly like a fresh one
                 self.pool = self._reset(self.pool, jnp.asarray(retired))
+
+        if stall_pending:  # prefill work after the last decode tick
+            stall_max = max(stall_max, max(stall_pending.values()))
 
         wall = time.perf_counter() - t0
         ticks = self.ticks - ticks0
         occ = self._occupancy_sum - occ0
         lat = sorted(c.latency_s for c in completions)
-        pct = lambda p: lat[min(len(lat) - 1, int(p * len(lat)))] if lat else 0.0
+        ttft = sorted(c.ttft_s for c in completions)
+        pct = lambda xs, p: (xs[min(len(xs) - 1, int(p * len(xs)))]
+                             if xs else 0.0)
         metrics = {
             "requests": len(completions),
             "wall_s": wall,
             "gen_tokens": gen_tokens,
             "agg_tok_s": gen_tokens / wall if wall > 0 else 0.0,
-            "p50_latency_s": pct(0.50),
-            "p95_latency_s": pct(0.95),
+            "p50_latency_s": pct(lat, 0.50),
+            "p95_latency_s": pct(lat, 0.95),
+            "ttft_p50_s": pct(ttft, 0.50),
+            "ttft_p95_s": pct(ttft, 0.95),
+            "max_decode_stall_ticks": stall_max,
             "ticks": ticks,
             "tick_traces": self.tick_traces,  # cumulative on purpose: the
-            "occupancy": occ / ticks if ticks else 0.0,  # invariant is ==1
+            "prefill_traces": self.prefill_traces,  # invariants are ==1 and
+            "occupancy": occ / ticks if ticks else 0.0,  # <= bucket count
         }
         return completions, metrics

@@ -108,12 +108,18 @@ def cache_positions(c: AttnCache) -> Array:
     return jnp.where(slots < pos, slots, -1)
 
 
-def _update_per_slot(c: AttnCache, k_new: Array, v_new: Array) -> AttnCache:
+def _update_per_slot(c: AttnCache, k_new: Array, v_new: Array,
+                     live: Optional[Array] = None) -> AttnCache:
     """Per-slot append: every batch row writes its S new tokens at its OWN
     position.  One scatter covers decode (S=1, B slots at B depths) and
     prefill-into-slot (B=1, S prompt tokens from pos 0).  Non-ring writes
     clamp at cap-1 — overfull rows are retired/zombie slots whose output is
-    masked anyway, and clamping keeps the write in-bounds without a branch."""
+    masked anyway, and clamping keeps the write in-bounds without a branch.
+
+    `live` (B,) bool freezes dead rows bit-for-bit: their pos stays put and
+    their scatter re-writes the bytes already in place.  With in-slot
+    chunked prefill a dead row can be MID-PREFILL, so a zombie append is no
+    longer harmless — it must not move the row's pos or bytes."""
     cap = c.k.shape[1]
     S = k_new.shape[1]
     if c.ring and S > cap:  # keep only the in-window tail
@@ -123,23 +129,33 @@ def _update_per_slot(c: AttnCache, k_new: Array, v_new: Array) -> AttnCache:
     abs_pos = c.pos[:, None] + jnp.arange(S, dtype=jnp.int32)  # (B, S)
     slot = jnp.mod(abs_pos, cap) if c.ring else jnp.clip(abs_pos, 0, cap - 1)
     rows = jnp.arange(c.k.shape[0], dtype=jnp.int32)[:, None]
+    step = S
+    if live is not None:
+        m = live[:, None, None, None]
+        k_new = jnp.where(m, k_new, c.k[rows, slot])
+        v_new = jnp.where(m, v_new, c.v[rows, slot])
+        step = S * live.astype(c.pos.dtype)
     k = c.k.at[rows, slot].set(k_new)
     v = c.v.at[rows, slot].set(v_new)
-    return constrain_cache(AttnCache(k=k, v=v, pos=c.pos + S, ring=c.ring))
+    return constrain_cache(AttnCache(k=k, v=v, pos=c.pos + step, ring=c.ring))
 
 
-def cache_update(c: AttnCache, k_new: Array, v_new: Array) -> AttnCache:
+def cache_update(c: AttnCache, k_new: Array, v_new: Array,
+                 live: Optional[Array] = None) -> AttnCache:
     """Append S_new tokens (prefill: S_new = S; decode: S_new = 1).
 
     Non-ring: writes at [pos, pos+S).  Ring: writes each token at its
     (absolute position % window) slot; assumes S_new <= capacity or the
     early tokens are overwritten (correct: they'd be out of window anyway).
-    With a per-slot pos (B,) every row appends at its own offset.
+    With a per-slot pos (B,) every row appends at its own offset; `live`
+    additionally freezes dead rows (continuous-batching decode tick).
     """
     cap = c.k.shape[1]
     S = k_new.shape[1]
     if c.pos.ndim == 1:
-        return _update_per_slot(c, k_new, v_new)
+        return _update_per_slot(c, k_new, v_new, live)
+    if live is not None:
+        raise ValueError("live-masked cache updates need a per-slot pos")
     if c.ring and S > 1:
         # prefill into a ring: keep only the last min(S, cap) tokens
         take = min(S, cap)
@@ -193,6 +209,28 @@ def write_row(p: Array, s: Array, slot) -> Array:
         return s.astype(p.dtype)
     idx = (slice(None),) * ax + (slot,)
     return p.at[idx].set(jnp.squeeze(s, axis=ax).astype(p.dtype))
+
+
+def read_row(p: Array, ref_shape, slot) -> Array:
+    """Gather row `slot` of pool leaf `p` as a batch-1 leaf shaped like
+    `ref_shape` (a batch-1 template shape — how the slot axis is recovered).
+    The exact inverse of `write_row`: `write_row(p, read_row(p, r, s), s)`
+    is the identity.  `slot` is traced, so one compilation serves every
+    chunk of every admission."""
+    ax = _slot_axis(p.shape, ref_shape)
+    if ax is None:
+        return p
+    return jnp.take(p, jnp.asarray(slot, jnp.int32)[None], axis=ax)
+
+
+def cache_gather_slot(c: AttnCache, ref: "AttnCache", slot) -> AttnCache:
+    """Gather row `slot` of a per-slot cache pool as a batch-1 cache (the
+    in-slot chunked prefill reads the slot, runs one prompt chunk, and
+    writes the row back).  `ref` is a batch-1 template (arrays or
+    ShapeDtypeStructs) fixing which axis is the slot axis per leaf."""
+    return c._replace(k=read_row(c.k, ref.k.shape, slot),
+                      v=read_row(c.v, ref.v.shape, slot),
+                      pos=read_row(c.pos, ref.pos.shape, slot))
 
 
 def cache_write_slot(c: AttnCache, sub: AttnCache, slot) -> AttnCache:

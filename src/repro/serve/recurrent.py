@@ -54,6 +54,11 @@ class RNNRuntime:
     """BN-LSTM / BN-GRU serving session (core/bnlstm.py serving entry)."""
 
     family = "rnn"
+    # chunked in-slot prefill (DESIGN.md §8): the O(1) recurrent carry makes
+    # any split exact, and the masked scan makes bucket padding exact — the
+    # engine compiles one prefill trace per power-of-two bucket, ever.
+    chunk_granularity = "token"
+    pad_buckets = True
 
     def __init__(self, cfg: BL.RNNConfig, variables: dict, *,
                  interpret: Optional[bool] = None):
@@ -63,10 +68,13 @@ class RNNRuntime:
         # once per session: dequantized layer-0 rows, BN affines, gate codes
         self.tables = BL.rnn_decode_tables(variables, cfg)
         def prefill_last(v, tb, toks, st):
-            # slice to the last position INSIDE jit so XLA never materializes
-            # the (B, T, vocab) prompt logits the serving loop discards
-            logits, st = BL.rnn_prefill(v, toks, cfg, st, tables=tb)
-            return logits[:, -1], st
+            # take the last-token logits from the carried state through the
+            # shared (B, 1, H) head (rnn_logits_last): XLA never
+            # materializes the (B, T, vocab) prompt logits the serving loop
+            # discards, and the chunked engine's first-token sample — which
+            # uses the same helper — is bit-identical to this one
+            _, st = BL.rnn_prefill(v, toks, cfg, st, tables=tb)
+            return BL.rnn_logits_last(v, st, cfg), st
 
         self._prefill = jax.jit(prefill_last)
         self._decode = jax.jit(
@@ -93,11 +101,14 @@ class RNNRuntime:
                                   tables=self.tables, live=live,
                                   interpret=self._interpret)
 
+    def prefill_chunk(self, tokens: Array, state: BL.RNNState, n: Array):
+        """Unjitted bucket-padded chunk body (engine jits gather+chunk+write
+        as one region): consume the first `n` of tokens, carry the state."""
+        return BL.rnn_prefill_chunk(self.variables, tokens, self.cfg, state,
+                                    n=n, tables=self.tables)
+
     def write_slots(self, state: BL.RNNState, sub: BL.RNNState, slots):
         return BL.rnn_write_slots(state, sub, slots)
-
-    def reset_slots(self, state: BL.RNNState, mask: Array):
-        return BL.rnn_reset_slots(state, mask)
 
     def param_nbytes(self) -> tuple[int, int]:
         return tree_nbytes(self.variables["params"])
@@ -117,6 +128,20 @@ class TransformerRuntime:
         self._prefill = jax.jit(
             lambda p, t, c: T.prefill(p, t, c, cfg, **self.extras))
         self._decode = jax.jit(lambda p, t, c: T.decode_step(p, t, c, cfg))
+        # chunked in-slot prefill policy (DESIGN.md §8).  Splitting a prompt
+        # mid-sequence is byte-exact only when every layer's math is
+        # per-token given the cache: recurrent mixers (rwkv/mamba) re-chunk
+        # their internal scans at different boundaries and MoE capacity
+        # competition spans the whole slice, so those archs prefill the
+        # prompt as ONE in-slot chunk.  Bucket PADDING additionally requires
+        # that pad writes land past the rewound pos in a non-ring cache —
+        # sliding-window rings recycle those slots, so they chunk exactly.
+        pat, rep, tail = T.expand_pattern(cfg)
+        kinds = set(pat) | set(tail)
+        whole = bool(kinds & {"mamba", "rwkv"}) or cfg.n_experts > 0
+        self.chunk_granularity = "whole" if whole else "token"
+        self.pad_buckets = (not whole) and not cfg.swa_all and \
+            "local" not in kinds
 
     def init_state(self, batch: int, context: int, *,
                    per_slot: bool = False):
@@ -133,24 +158,18 @@ class TransformerRuntime:
 
     def decode_fn(self, tok: Array, state, live: Optional[Array] = None):
         """Unjitted decode body for callers that jit a larger region (the
-        continuous-batching engine's tick).  Dead slots need no state mask
-        here: a per-slot cache write stays in-bounds (clamped) and admission
-        rewrites the whole cache row, so zombie rows are harmless; their
-        logits are garbage and the engine never samples them."""
-        del live
-        return T.decode_step(self.params, tok, state, self.cfg)
+        continuous-batching engine's tick).  `live` (B,) freezes dead rows'
+        cache writes and recurrent states bit-for-bit — with in-slot
+        chunked prefill a dead row can be a slot MID-PREFILL, so the old
+        zombie-writes-are-harmless argument no longer holds.  Dead rows'
+        logits stay garbage; the engine never samples them."""
+        return T.decode_step(self.params, tok, state, self.cfg, live=live)
 
-    def reset_slots(self, state, mask: Array):
-        """Retire slots where `mask` (B,) is True: every AttnCache in the
-        pool drops its per-slot pos to 0 (stale KV reads as unwritten and
-        is masked — kvcache.cache_reset_slots), bounding what a zombie row
-        attends over.  Recurrent SSM/RWKV leaves stay as-is; admission
-        rewrites the whole slot row anyway."""
-        from repro.serve.kvcache import AttnCache, cache_reset_slots
-        is_cache = lambda x: isinstance(x, AttnCache)
-        return jax.tree.map(
-            lambda x: cache_reset_slots(x, mask) if is_cache(x) else x,
-            state, is_leaf=is_cache)
+    def prefill_chunk(self, tokens: Array, state, n: Array):
+        """Unjitted prompt-chunk body (engine jits gather+chunk+write as one
+        region): consume the first `n` of tokens against the carried cache;
+        bucket padding past `n` is rewound off the attention pos."""
+        return T.prefill(self.params, tokens, state, self.cfg, n=n)
 
     def param_nbytes(self) -> tuple[int, int]:
         return tree_nbytes(self.params)

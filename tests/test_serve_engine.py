@@ -65,6 +65,7 @@ def test_sample_slots_matches_scalar_sample_per_row():
 
 
 def test_rnn_write_and_reset_slots():
+    from repro.serve.engine import tree_reset_slots
     cfg = _rnn_cfg("lstm")
     pool = BL.rnn_state_init(cfg, 4, per_slot=True)
     assert pool.pos.shape == (4,)
@@ -75,7 +76,9 @@ def test_rnn_write_and_reset_slots():
     assert float(pool.h[:, 2].min()) == 1.0 and float(pool.c[:, 2].max()) == 2.0
     assert pool.pos.tolist() == [0, 0, 7, 0]
     assert float(jnp.abs(pool.h[:, [0, 1, 3]]).max()) == 0.0  # others untouched
-    pool = BL.rnn_reset_slots(pool, jnp.array([False, False, True, False]))
+    # the engine's shape-aware scrub (the ONE retire path) zeroes h/c/pos
+    ref = BL.rnn_state_init(cfg, 1, per_slot=True)
+    pool = tree_reset_slots(pool, ref, jnp.array([False, False, True, False]))
     assert float(jnp.abs(pool.h).max()) == 0.0
     assert pool.pos.tolist() == [0, 0, 0, 0]
 
@@ -161,7 +164,10 @@ def test_decode_step_live_mask_freezes_dead_slots(cell, packed):
 def test_engine_matches_sequential_rnn(cell, packed):
     cfg, rt = _rnn_runtime(cell, packed=packed)
     reqs = _requests(cfg.vocab, 7, rng_seed=3)
-    eng = ServeEngine(rt, cfg.vocab, slots=3, max_context=64)
+    # prefill_chunk=4 < max prompt: the parity bar covers CHUNKED in-slot
+    # prefill (multi-chunk prompts, bucket-padded tails), not just decode
+    eng = ServeEngine(rt, cfg.vocab, slots=3, max_context=64,
+                      prefill_chunk=4)
     comps, m = eng.run([dataclasses.replace(r) for r in reqs], realtime=False)
     assert m["requests"] == len(reqs)
     by_rid = {c.rid: c for c in comps}
@@ -185,7 +191,8 @@ def test_engine_matches_sequential_transformer(packed):
     rt = TransformerRuntime(cfg, params)
     reqs = _requests(cfg.vocab, 4, rng_seed=5, max_prompt=8, max_gen=5)
     CTX = 48
-    eng = ServeEngine(rt, cfg.vocab, slots=2, max_context=CTX)
+    eng = ServeEngine(rt, cfg.vocab, slots=2, max_context=CTX,
+                      prefill_chunk=3)
     comps, _ = eng.run([dataclasses.replace(r) for r in reqs], realtime=False)
     by_rid = {c.rid: c for c in comps}
     for r in reqs:
@@ -208,7 +215,10 @@ def test_engine_matches_sequential_ring_cache():
     rt = TransformerRuntime(cfg, params)
     reqs = _requests(cfg.vocab, 3, rng_seed=7, max_prompt=7, max_gen=4)
     CTX = 24
-    eng = ServeEngine(rt, cfg.vocab, slots=2, max_context=CTX)
+    # ring caches chunk at exact lengths (no bucket padding: pad writes
+    # would recycle in-window slots) — still multi-chunk at chunk 3
+    eng = ServeEngine(rt, cfg.vocab, slots=2, max_context=CTX,
+                      prefill_chunk=3)
     comps, _ = eng.run([dataclasses.replace(r) for r in reqs], realtime=False)
     by_rid = {c.rid: c for c in comps}
     for r in reqs:
@@ -266,7 +276,274 @@ def test_engine_rejects_invalid_requests_upfront():
     assert r.rid is None and comps[0].rid == 0
 
 
+# --- chunked in-slot prefill units -------------------------------------------
+
+
+@pytest.mark.parametrize("cell", ["lstm", "gru"])
+def test_rnn_prefill_chunk_matches_prefill(cell):
+    """A bucket-padded chunk sequence == one unpadded rnn_prefill, bit for
+    bit: state after the real tokens, logits at the last real token."""
+    cfg, rt = _rnn_runtime(cell)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, 11), 0, cfg.vocab)
+    st_ref = BL.rnn_state_init(cfg, 1, per_slot=True)
+    _, st_ref = BL.rnn_prefill(rt.variables, toks, cfg, st_ref,
+                               tables=rt.tables)
+    lg_ref = BL.rnn_logits_last(rt.variables, st_ref, cfg)
+    st = BL.rnn_state_init(cfg, 1, per_slot=True)
+    for lo, hi, bucket in [(0, 4, 4), (4, 8, 4), (8, 11, 4)]:  # 3 real, pad 1
+        pad = jnp.zeros((1, bucket), toks.dtype)
+        chunk = jax.lax.dynamic_update_slice(pad, toks[:, lo:hi], (0, 0))
+        lg, st = BL.rnn_prefill_chunk(rt.variables, chunk, cfg, st,
+                                      n=hi - lo, tables=rt.tables)
+    np.testing.assert_array_equal(np.asarray(st.h), np.asarray(st_ref.h))
+    np.testing.assert_array_equal(np.asarray(st.c), np.asarray(st_ref.c))
+    assert st.pos.tolist() == [11]
+    np.testing.assert_array_equal(np.asarray(lg), np.asarray(lg_ref))
+
+
+def test_tree_gather_slot_inverts_tree_write_slot():
+    """read half of the in-slot surgery: gather(write(pool, sub, s), s) == sub
+    for every leaf of a transformer cache pool (stacked + tail axes)."""
+    from repro.serve.engine import tree_gather_slot
+    cfg = get_config("qwen3-0.6b").reduced()
+    pool = T.init_caches(cfg, 3, 16, dtype=jnp.float32, per_slot=True)
+    ref = jax.eval_shape(
+        lambda: T.init_caches(cfg, 1, 16, dtype=jnp.float32, per_slot=True))
+    sub = T.init_caches(cfg, 1, 16, dtype=jnp.float32, per_slot=True)
+    sub = jax.tree.map(lambda a: jnp.ones_like(a), sub)
+    pool = tree_write_slot(pool, sub, 2)
+    back = tree_gather_slot(pool, ref, 2)
+    for a, b in zip(jax.tree_util.tree_leaves(back),
+                    jax.tree_util.tree_leaves(sub)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_transformer_decode_live_mask_freezes_dead_rows():
+    """The decode tick must not touch a dead row's cache: with in-slot
+    prefill a dead row can be MID-PREFILL, so zombie appends (bytes OR pos)
+    would corrupt the prompt it is accumulating."""
+    cfg = get_config("qwen3-0.6b").reduced()
+    params = T.model_init(jax.random.PRNGKey(0), cfg)
+    rt = TransformerRuntime(cfg, params)
+    st = rt.init_state(3, 16, per_slot=True)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (3, 3), 0, cfg.vocab)
+    _, st = rt.prefill(toks, st)
+    live = jnp.array([True, False, True])
+    _, st2 = jax.jit(rt.decode_fn)(jnp.array([1, 2, 3]), st, live)
+    # dead row 1: every cache leaf bit-identical; live rows advanced pos
+    ref = jax.eval_shape(lambda: rt.init_state(1, 16, per_slot=True))
+    from repro.serve.engine import tree_gather_slot
+    row_before = tree_gather_slot(st, ref, 1)
+    row_after = tree_gather_slot(st2, ref, 1)
+    for a, b in zip(jax.tree_util.tree_leaves(row_before),
+                    jax.tree_util.tree_leaves(row_after)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    live_rows = tree_gather_slot(st2, ref, 0)
+    prev_rows = tree_gather_slot(st, ref, 0)
+    changed = any(not np.array_equal(np.asarray(a), np.asarray(b))
+                  for a, b in zip(jax.tree_util.tree_leaves(live_rows),
+                                  jax.tree_util.tree_leaves(prev_rows)))
+    assert changed  # live rows really stepped
+
+
+def test_engine_matches_sequential_hybrid_ssm():
+    """zamba2 (mamba + shared attention): 'whole' chunk granularity, and
+    the decode tick's recurrent-state freeze (_freeze_dead) must keep a
+    dead slot's S-matrices / conv tails bit-frozen — with in-slot prefill
+    a dead row can be mid-prefill, so this is load-bearing, not cosmetic."""
+    from repro.serve.engine import tree_gather_slot
+    cfg = get_config("zamba2-1.2b").reduced()
+    params = T.model_init(jax.random.PRNGKey(0), cfg)
+    rt = TransformerRuntime(cfg, params)
+    assert rt.chunk_granularity == "whole" and not rt.pad_buckets
+
+    # dead-row freeze across EVERY pool leaf (ssm h/conv/pos included)
+    st = rt.init_state(2, 16, per_slot=True)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 3), 0, cfg.vocab)
+    _, st = rt.prefill(toks, st)
+    _, st2 = jax.jit(rt.decode_fn)(jnp.array([1, 2]), st,
+                                   jnp.array([False, True]))
+    ref = jax.eval_shape(lambda: rt.init_state(1, 16, per_slot=True))
+    for a, b in zip(jax.tree_util.tree_leaves(tree_gather_slot(st, ref, 0)),
+                    jax.tree_util.tree_leaves(tree_gather_slot(st2, ref, 0))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # and the engine over the hybrid still streams byte-identically
+    reqs = _requests(cfg.vocab, 2, rng_seed=37, max_prompt=6, max_gen=4)
+    CTX = 20
+    eng = ServeEngine(rt, cfg.vocab, slots=2, max_context=CTX,
+                      prefill_chunk=4)
+    comps, m = eng.run([dataclasses.replace(r) for r in reqs],
+                       realtime=False)
+    assert m["tick_traces"] == 1
+    by_rid = {c.rid: c for c in comps}
+    for r in reqs:
+        out, _ = drive_session(
+            rt, jnp.asarray(np.asarray(r.prompt, np.int32))[None], cfg.vocab,
+            gen=r.max_tokens, temperature=r.temperature, top_k=r.top_k,
+            seed=r.seed, context=CTX)
+        assert by_rid[r.rid].tokens == out[0].tolist()
+
+
+# --- TTFT semantics + scheduling guarantees ----------------------------------
+
+
+def test_completion_timestamps_are_ordered():
+    """t_submit <= t_admit <= t_first <= t_done for every completion of a
+    mixed realtime workload — t_first is stamped when the first token is
+    actually sampled (after the last prompt chunk), not at admission."""
+    cfg, rt = _rnn_runtime("lstm")
+    reqs = _requests(cfg.vocab, 6, rng_seed=13, max_prompt=12)
+    for i, r in enumerate(reqs):
+        r.arrival_s = 0.002 * i
+    eng = ServeEngine(rt, cfg.vocab, slots=2, max_context=64,
+                      prefill_chunk=4)
+    comps, _ = eng.run(reqs, realtime=True)
+    assert len(comps) == len(reqs)
+    for c in comps:
+        assert c.t_submit <= c.t_admit <= c.t_first <= c.t_done
+        assert c.ttft_s >= 0 and c.queue_s >= 0
+    # multi-chunk prompts really did sample their first token after admit
+    long = [c for c in comps if c.prompt_len > 4]
+    assert long and all(c.t_first > c.t_admit for c in long)
+
+
+def test_long_prompt_does_not_stall_decodes():
+    """Head-of-line blocking is gone: while a 40-token prompt prefills in
+    2-token chunks, a live short request keeps decoding every tick and
+    finishes BEFORE the long prompt's first token; no admission ever runs
+    more than one chunk between decode ticks."""
+    cfg, rt = _rnn_runtime("lstm")
+    eng = ServeEngine(rt, cfg.vocab, slots=2, max_context=64,
+                      prefill_chunk=2)
+    rng = np.random.default_rng(0)
+    short = Request(prompt=rng.integers(0, cfg.vocab, size=2), max_tokens=6,
+                    temperature=0.8, top_k=5, seed=7, rid=0, arrival_s=0.0)
+    long = Request(prompt=rng.integers(0, cfg.vocab, size=40), max_tokens=2,
+                   temperature=0.8, top_k=5, seed=8, rid=1, arrival_s=0.0)
+    comps, m = eng.run([short, long], realtime=False)
+    assert m["max_decode_stall_ticks"] <= 1
+    by = {c.rid: c for c in comps}
+    assert by[0].t_done < by[1].t_first  # short finished mid-long-prefill
+    for r in (short, long):  # and the interleaving changed no bytes
+        out, _ = drive_session(
+            rt, jnp.asarray(np.asarray(r.prompt, np.int32))[None], cfg.vocab,
+            gen=r.max_tokens, temperature=r.temperature, top_k=r.top_k,
+            seed=r.seed)
+        assert by[r.rid].tokens == out[0].tolist()
+
+
+# --- engine edge cases -------------------------------------------------------
+
+
+def test_prompt_exactly_fills_context():
+    """prompt == max_context - 1 with max_tokens == 1 is the largest legal
+    request; it must admit, chunk, sample and retire cleanly."""
+    cfg, rt = _rnn_runtime("lstm")
+    CTX = 16
+    eng = ServeEngine(rt, cfg.vocab, slots=2, max_context=CTX,
+                      prefill_chunk=4)
+    prompt = np.arange(CTX - 1, dtype=np.int32) % cfg.vocab
+    comps, _ = eng.run([Request(prompt=prompt, max_tokens=1, seed=3, rid=0)],
+                       realtime=False)
+    out, _ = drive_session(rt, jnp.asarray(prompt)[None], cfg.vocab, gen=1,
+                           temperature=0.8, top_k=0, seed=3)
+    assert comps[0].tokens == out[0].tolist()
+    assert comps[0].finished == "length"
+    assert not eng._live_host.any() and eng._free_slot() == 0
+
+
+def test_eos_on_admission_token():
+    """EOS hit by the very first sampled token: the request completes at
+    prefill time without ever occupying a decode tick."""
+    cfg, rt = _rnn_runtime("lstm")
+    probe, _ = drive_session(rt, jnp.zeros((1, 5), jnp.int32), cfg.vocab,
+                             gen=1, temperature=0.8, top_k=0, seed=11)
+    eos = probe[0].tolist()[0]
+    eng = ServeEngine(rt, cfg.vocab, slots=2, max_context=64, eos_id=eos,
+                      prefill_chunk=2)
+    ticks0 = eng.ticks
+    comps, _ = eng.run([Request(prompt=np.zeros(5, np.int32), max_tokens=8,
+                                temperature=0.8, top_k=0, seed=11)],
+                       realtime=False)
+    assert comps[0].finished == "eos" and comps[0].tokens == [eos]
+    assert eng.ticks == ticks0  # never decoded
+    assert comps[0].t_first == comps[0].t_done
+    assert eng._free_slot() == 0
+
+
+def test_rejected_request_does_not_poison_inflight_workload():
+    """Validation fails BEFORE anything enters a slot, and a rejected
+    run() leaves the engine fully serviceable: the next workload still
+    matches the sequential oracle with the tick never retracing."""
+    cfg, rt = _rnn_runtime("lstm")
+    eng = ServeEngine(rt, cfg.vocab, slots=2, max_context=16,
+                      prefill_chunk=4)
+    good = _requests(cfg.vocab, 3, rng_seed=17, max_prompt=8, max_gen=5)
+    bad = Request(prompt=np.zeros(14, np.int32), max_tokens=8)  # 14+8 > 16
+    with pytest.raises(ValueError, match="max_context"):
+        eng.run([dataclasses.replace(good[0]), bad], realtime=False)
+    assert not eng._live_host.any() and not eng._prefill_q
+    comps, m = eng.run([dataclasses.replace(r) for r in good],
+                       realtime=False)
+    assert m["tick_traces"] == 1
+    by_rid = {c.rid: c for c in comps}
+    for r in good:
+        out, _ = drive_session(
+            rt, jnp.asarray(np.asarray(r.prompt, np.int32))[None], cfg.vocab,
+            gen=r.max_tokens, temperature=r.temperature, top_k=r.top_k,
+            seed=r.seed)
+        assert by_rid[r.rid].tokens == out[0].tolist()
+
+
+def test_run_twice_reuses_slots_cleanly():
+    """Back-to-back workloads on ONE engine: freed slots are scrubbed and
+    reused, and the second wave's streams still match the oracle exactly
+    (nothing from wave 1 leaks through a reused slot row)."""
+    cfg, rt = _rnn_runtime("lstm")
+    eng = ServeEngine(rt, cfg.vocab, slots=2, max_context=64,
+                      prefill_chunk=4)
+    eng.run(_requests(cfg.vocab, 4, rng_seed=19), realtime=False)
+    wave2 = _requests(cfg.vocab, 4, rng_seed=23)
+    comps, m = eng.run([dataclasses.replace(r) for r in wave2],
+                       realtime=False)
+    assert m["tick_traces"] == 1
+    by_rid = {c.rid: c for c in comps}
+    for r in wave2:
+        out, _ = drive_session(
+            rt, jnp.asarray(np.asarray(r.prompt, np.int32))[None], cfg.vocab,
+            gen=r.max_tokens, temperature=r.temperature, top_k=r.top_k,
+            seed=r.seed)
+        assert by_rid[r.rid].tokens == out[0].tolist()
+    assert {c.slot for c in comps} <= {0, 1}  # same two slots, recycled
+
+
 # --- the compile-once invariant ----------------------------------------------
+
+
+@pytest.mark.parametrize("family", ["rnn", "qwen3"])
+def test_warm_buckets_then_run_traces_nothing(family):
+    """After warm() compiles the declared chunk buckets, a measured run()
+    performs ZERO new traces — prefill included, not just the decode tick.
+    Bucket padding is what makes the declared set traffic-independent."""
+    if family == "rnn":
+        cfg, rt = _rnn_runtime("lstm")
+        vocab, ctx = cfg.vocab, 64
+        reqs = _requests(vocab, 6, rng_seed=29, max_prompt=13)
+    else:
+        cfg = get_config("qwen3-0.6b").reduced()
+        params = T.model_init(jax.random.PRNGKey(0), cfg)
+        rt = TransformerRuntime(cfg, params)
+        vocab, ctx = cfg.vocab, 32
+        reqs = _requests(vocab, 3, rng_seed=29, max_prompt=9, max_gen=4)
+    eng = ServeEngine(rt, vocab, slots=2, max_context=ctx, prefill_chunk=4)
+    eng.warm()  # NO prompt lengths: the declared buckets must suffice
+    pt, tt = eng.prefill_traces, eng.tick_traces
+    assert tt == 1 and pt == len(eng.declared_buckets())
+    comps, m = eng.run(reqs, realtime=False)
+    assert len(comps) == len(reqs)
+    assert eng.prefill_traces == pt, "a prompt length traced a new prefill"
+    assert eng.tick_traces == 1, "occupancy churn retraced the tick"
 
 
 def test_tick_compiles_once_across_occupancy_churn():

@@ -5,20 +5,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCH_IDS, get_config
 from repro.configs.shapes import SHAPES, decode_context
 from repro.launch.sharding import ROW_W, param_pspec
 from repro.models import transformer as T
 from repro.serve.kvcache import kv_pspec
-from repro.runtime import use_mesh
+from repro.runtime import abstract_mesh, use_mesh
 
 
 def _mesh(multi=False):
+    # abstract_mesh bridges the AbstractMesh constructor change between
+    # jax 0.4.x ((name, size) pairs) and >= 0.5 ((sizes, names))
     if multi:
-        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
-    return AbstractMesh((16, 16), ("data", "model"))
+        return abstract_mesh((2, 16, 16), ("pod", "data", "model"))
+    return abstract_mesh((16, 16), ("data", "model"))
 
 
 def _key_struct():

@@ -87,10 +87,11 @@ def test_dots_remat_policy_matches_full():
 
 
 def test_serve_param_pspec_drops_fsdp_axes():
-    from jax.sharding import AbstractMesh, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
     from repro.launch.sharding import serve_param_pspec
+    from repro.runtime import abstract_mesh
     import jax.tree_util as jtu
-    mesh = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    mesh = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
     path = (jtu.DictKey("Wq"),)
     leaf = jax.ShapeDtypeStruct((4096, 4096), jnp.float32)
     assert serve_param_pspec(path, leaf, mesh) == P(None, "model")
