@@ -11,6 +11,13 @@ across PRs.  The tick-trace count rides along as a regression tripwire for
 the compile-once invariant (it must be 1), and the stall count for the
 no-head-of-line-blocking invariant (<= 1 chunk).
 
+The speculative section (DESIGN.md §9) DRAINS one fixed greedy workload
+twice over the same fp masters — plain decoding vs packed-ternary-draft
+speculation — and records the acceptance rate and both throughputs
+(realtime=False: drain tok/s measures decode capacity, not the offered
+arrival rate).  The spec row's agg_tok_s beating the plain row's is the
+paper's draft-model thesis measured end to end.
+
 Numbers are CPU-container interpret-mode throughputs at reduced scale: they
 track *relative* regressions of the scheduling path, not hardware ceilings.
 """
@@ -29,7 +36,7 @@ from repro.core.qtensor import export_packed
 from repro.core.quantize import QuantSpec
 from repro.models import transformer as T
 from repro.serve.engine import ServeEngine
-from repro.serve.recurrent import serving_runtime
+from repro.serve.recurrent import serving_runtime, speculative_draft
 from repro.launch.serve import synth_traffic
 
 
@@ -66,7 +73,102 @@ def _drive(rt, vocab: int, *, slots: int, requests: int, rate: float,
     }
 
 
-def serve_engine(quick: bool = False):
+def _best_of(engines, reqs, trials: int) -> list:
+    """Noise-resistant drain measurement: INTERLEAVE the engines trial by
+    trial (so a machine-speed phase hits both comparands equally) and keep
+    each engine's fastest run.  The single-core container's scheduler
+    noise is one-sided (runs only ever get slower), so min-wall is the
+    robust estimator; tokens and acceptance are identical across trials
+    (greedy + fixed seeds)."""
+    best = [None] * len(engines)
+    for _ in range(trials):
+        for i, eng in enumerate(engines):
+            _, m = eng.run([dataclasses.replace(r) for r in reqs],
+                           realtime=False)
+            if best[i] is None or m["agg_tok_s"] > best[i]["agg_tok_s"]:
+                best[i] = m
+    return best
+
+
+def _spec_rows(quick: bool) -> list:
+    """Drain ONE greedy workload through plain fp decoding and through
+    packed-draft speculation over the same masters: acceptance rate and
+    the emitted-tok/s win, recorded per PR.
+
+    The masters are BRIEFLY TRAINED with ternary quantization in the loop
+    (benchmarks/common.train_rnn) rather than random-init: the paper's
+    premise — and the acceptance-rate driver — is that a net trained with
+    quantized weights tracks its fp twin closely.  Random init measures
+    quantization noise, not the method (acceptance ~0.45 vs ~0.75).
+
+    slots=1: speculation's serving win is PER-STREAM decode latency (the
+    sequential-bottleneck regime it was invented for).  At full batch on
+    this container the comparison is compute-bound and the draft's packed
+    kernels are interpret-emulated, so the aggregate-throughput rows above
+    remain the batch story."""
+    from benchmarks.common import train_rnn
+
+    # the spec configuration is the SAME in quick and full mode (the drain
+    # itself is sub-second; 120 training steps ~11 s buy acceptance ~0.75
+    # vs ~0.6) — quick only trims trials and skips the hard win assert
+    requests = 6
+    prompt = 6
+    gen = 48
+    slots = 1
+    spec_k = 4
+    trials = 3 if quick else 5
+
+    tr = train_rnn("ptb", "ternary", hidden=64, steps=120, batch=16, seq=32)
+    cfg = dataclasses.replace(tr["cfg"], quant=QuantSpec(mode="none"))
+    rt = serving_runtime(cfg, {"params": tr["state"].params,
+                               "state": tr["state"].bn_state})
+    draft = speculative_draft(rt, mode="ternary")
+
+    ctx = prompt + gen
+    reqs = synth_traffic(cfg.vocab, requests=requests, rate=1e9,
+                         prompt_len=prompt, gen=gen, temperature=0.0,
+                         top_k=0, seed=0)
+    lens = [np.asarray(r.prompt).size for r in reqs]
+    plain = ServeEngine(rt, cfg.vocab, slots=slots, max_context=ctx,
+                        prefill_chunk=8)
+    spec = ServeEngine(rt, cfg.vocab, slots=slots, max_context=ctx,
+                       prefill_chunk=8, draft=draft, spec_k=spec_k)
+    plain.warm(lens)
+    spec.warm(lens)
+    mp, ms = _best_of([plain, spec], reqs, trials)
+    assert mp["tick_traces"] == 1 and ms["spec_traces"] == 1
+
+    def row(m):
+        return {
+            "slots": slots, "requests": m["requests"],
+            "gen_tokens": m["gen_tokens"],
+            "agg_tok_s": round(m["agg_tok_s"], 1),
+            "ticks": m["ticks"],
+        }
+
+    rows = [
+        {"arch": "rnn-paper", "quant": "none", "mode": "plain-drain",
+         **row(mp), "tick_traces": mp["tick_traces"]},
+        {"arch": "rnn-paper", "quant": "none+ternary-draft",
+         "mode": "spec-drain", **row(ms), "spec_k": ms["spec_k"],
+         "accept_rate": round(ms["accept_rate"], 3),
+         "drafted_tokens": ms["drafted_tokens"],
+         "draft_tok_s": round(ms["draft_tok_s"], 1),
+         "spec_traces": ms["spec_traces"],
+         "speedup_vs_plain": round(ms["agg_tok_s"] / mp["agg_tok_s"], 2)},
+    ]
+    # the recorded (full, idle-machine) run must show the win; the --quick
+    # smoke keeps CI runners honest about the MACHINERY without flaking on
+    # a shared box's scheduler noise
+    if not quick:
+        assert rows[1]["agg_tok_s"] > rows[0]["agg_tok_s"], \
+            "speculative drain did not beat plain fp decoding"
+    return rows
+
+
+def serve_engine(quick: bool = False, spec_only: bool = False):
+    if spec_only:
+        return _spec_rows(quick)
     requests = 6 if quick else 24
     prompt = 8 if quick else 16
     gen = 6 if quick else 24
@@ -96,9 +198,27 @@ def serve_engine(quick: bool = False):
                           requests=max(requests // 2, 4), rate=rate,
                           prompt=prompt, gen=max(gen // 2, 4))})
 
+    # --- speculative decoding: packed drafts vs plain fp, same masters -----
+    rows.extend(_spec_rows(quick))
+
     write("serve_engine", rows, meta={"quick": quick,
                                       "backend": jax.default_backend(),
                                       "note": "reduced scale, interpret-mode "
                                               "kernels on CPU; Poisson "
-                                              "mixed-length traffic replay"})
+                                              "mixed-length traffic replay; "
+                                              "spec rows drain one greedy "
+                                              "workload (realtime=False)"})
     return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--spec", action="store_true",
+                    help="run only the speculative-vs-plain drain comparison "
+                         "(does not rewrite serve_engine.json)")
+    args = ap.parse_args()
+    for r in serve_engine(quick=args.quick, spec_only=args.spec):
+        print(r)

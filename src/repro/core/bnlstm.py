@@ -299,20 +299,33 @@ def _bn_affine(p: BNParams, s: BNState, eps: float) -> tuple[Array, Array]:
     return p.phi * inv, p.gamma - p.phi * s.mean * inv
 
 
-def rnn_decode_tables(variables: dict, cfg: RNNConfig) -> list:
+def rnn_decode_tables(variables: dict, cfg: RNNConfig, *,
+                      dense: bool = False) -> list:
     """Per-session serving artifacts, computed ONCE and reused every step.
 
     Per layer: deterministic/packed weights, the h-side and x-side BN affines,
     the cell-norm affine, and — for layer 0 — the token gather table with the
     x-side BN already folded in (`rows_bn`), so serving never dequantizes the
     embedding rows per call.  When `wh` is a packed QTensor the table also
-    carries gate-aligned codes for the fused Pallas decode-step kernel."""
+    carries gate-aligned codes for the fused Pallas decode-step kernel.
+
+    `dense=True` expands packed weights into DENSE fp tables at session
+    setup, the same once-per-session dequantize layer 0's `rows_bn` already
+    gets: the serving tree stays the packed QTensor export (memory is still
+    the 2-bit codes), but every step runs plain dense matmuls.  That is the
+    right trade for backends whose packed kernels are emulated (CPU
+    interpret mode) and for roles where raw step latency beats memory
+    traffic — the speculative DRAFT runtime is the motivating case."""
     params, bn_state = variables["params"], variables["state"]
     qw = _quantized_weights(params, cfg, None, training=False)
     tables = []
     for l in range(cfg.n_layers):
         lp, ls = params["layers"][l], bn_state["layers"][l]
         qx, qh = qw[l]
+        if dense and is_qtensor(qh):
+            qh = qh.dequantize(cfg.dtype)
+        if dense and is_qtensor(qx):
+            qx = qx.dequantize(cfg.dtype)
         sx, tx = _bn_affine(lp["bn_x"], ls["bn_x"], cfg.eps)
         sh, th = _bn_affine(lp["bn_h"], ls["bn_h"], cfg.eps)
         if cfg.cell == "lstm" and cfg.cell_norm:
@@ -534,6 +547,57 @@ def rnn_decode_step(variables: dict, tok: Array, cfg: RNNConfig,
     step = 1 if live is None else live.astype(state.pos.dtype)
     new_state = RNNState(h=jnp.stack(hT), c=jnp.stack(cT), pos=state.pos + step)
     return logits, new_state
+
+
+def rnn_verify(variables: dict, tokens: Array, cfg: RNNConfig,
+               state: RNNState, *, tables: Optional[list] = None,
+               live: Optional[Array] = None,
+               interpret: Optional[bool] = None):
+    """Speculative-decoding target verify: T tokens through the EXACT
+    decode-step body, one `lax.scan` (DESIGN.md §9).
+
+    tokens: (B, T) int32.  Returns (logits (B, T, vocab), end RNNState,
+    (hs, cs)) where hs/cs are the per-step carried states stacked over time
+    ((T, L, B, H)) — the rollback material `rnn_spec_commit` selects from.
+
+    The scan body IS `rnn_decode_step` (fused Pallas kernel and all), so
+    position i's logits and state are bit-identical to i+1 sequential
+    decode steps — at temperature 0 a verified stream is byte-identical to
+    plain decoding, which is the whole speculative contract.  `live` (B,)
+    freezes dead continuous-batching rows exactly as in the tick."""
+    if tables is None:
+        tables = rnn_decode_tables(variables, cfg)
+
+    def body(carry, tok_t):
+        lg, ns = rnn_decode_step(variables, tok_t, cfg, carry, tables=tables,
+                                 live=live, interpret=interpret)
+        return ns, (lg, ns.h, ns.c)
+
+    end, (lgs, hs, cs) = jax.lax.scan(body, state,
+                                      jnp.swapaxes(tokens, 0, 1))
+    return jnp.swapaxes(lgs, 0, 1), end, (hs, cs)
+
+
+def rnn_spec_commit(state0: RNNState, emits, n: Array) -> RNNState:
+    """Roll a verified/drafted span back to `n` committed tokens per slot.
+
+    emits: (hs, cs) stacked per-step states from `rnn_verify` (or the
+    engine's draft loop), shape (T, L, B, H); n: (B,) int32 in [0, T].
+    Slot b gets the state after its first n[b] tokens — n = 0 restores
+    `state0`'s row bit-for-bit (the reject-everything rollback; also the
+    dead-slot no-op), because the O(1) recurrent state needs no byte
+    surgery: rollback is a SELECT, not a rewind."""
+    hs, cs = emits
+    idx = jnp.maximum(n - 1, 0)[:, None, None, None]
+
+    def pick(stack, base):
+        sb = jnp.moveaxis(stack, 2, 0)                  # (B, T, L, H)
+        sel = jnp.take_along_axis(sb, idx, axis=1)[:, 0]
+        sel = jnp.moveaxis(sel, 0, 1)                   # (L, B, H)
+        return jnp.where((n > 0)[None, :, None], sel, base)
+
+    return RNNState(h=pick(hs, state0.h), c=pick(cs, state0.c),
+                    pos=state0.pos + n)
 
 
 def lm_loss(variables, tokens, targets, cfg: RNNConfig, *, training, rng=None):

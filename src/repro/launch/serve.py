@@ -22,6 +22,14 @@ and generation lengths is replayed against a fixed slot pool, requests are
 admitted as slots free up, and the report is aggregate tok/s, slot
 occupancy and p50/p95 per-request latency — the serving numbers a fleet
 actually provisions against.
+
+--spec-k N adds speculative decoding to --traffic: the fp master tree is
+the TARGET and its own packed binary/ternary export (the --quant mode) the
+DRAFT — each round the draft proposes N tokens per slot, the target
+verifies them in one multi-token step, and rejection sampling keeps the
+output distribution exactly the target's (byte-identical at temperature
+0).  The report adds the measured acceptance rate and the drafted-token
+throughput next to the emitted tok/s.
 """
 from __future__ import annotations
 
@@ -39,7 +47,7 @@ from repro.core.quantize import QuantSpec
 from repro.models import transformer as T
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.recurrent import (RNNRuntime, TransformerRuntime,
-                                   drive_session)
+                                   drive_session, speculative_draft)
 
 
 def packed_model_bytes(qparams) -> tuple[int, int]:
@@ -117,11 +125,12 @@ def synth_traffic(vocab: int, *, requests: int, rate: float, prompt_len: int,
     return reqs
 
 
-def run_traffic(cfg, rt, args) -> dict:
+def run_traffic(cfg, rt, args, draft=None) -> dict:
     """Replay a Poisson workload through the continuous-batching engine."""
     ctx = args.prompt_len + args.gen
     eng = ServeEngine(rt, cfg.vocab, slots=args.slots, max_context=ctx,
-                      prefill_chunk=args.prefill_chunk)
+                      prefill_chunk=args.prefill_chunk,
+                      draft=draft, spec_k=args.spec_k if draft else 0)
     reqs = synth_traffic(cfg.vocab, requests=args.requests, rate=args.rate,
                          prompt_len=args.prompt_len, gen=args.gen,
                          temperature=args.temperature, top_k=args.top_k,
@@ -143,6 +152,12 @@ def run_traffic(cfg, rt, args) -> dict:
           f"ttft: p50 {m['ttft_p50_s']*1e3:.0f} ms  "
           f"p95 {m['ttft_p95_s']*1e3:.0f} ms  "
           f"(max decode stall: {m['max_decode_stall_ticks']} chunk)")
+    if draft is not None:
+        print(f"speculative: k={m['spec_k']}  "
+              f"accept rate {100 * m['accept_rate']:.0f}%  "
+              f"({m['accepted_drafts']}/{m['drafted_tokens']} drafts over "
+              f"{m['spec_rounds']} rounds)  "
+              f"draft {m['draft_tok_s']:.1f} tok/s proposed")
     done = sorted(comps, key=lambda c: c.rid)[:4]
     for c in done:
         print(f"  req {c.rid}: prompt {c.prompt_len} -> {len(c.tokens)} toks "
@@ -178,14 +193,31 @@ def main(argv=None):
                     help="in-slot prefill chunk size: at most one chunk "
                          "runs between decode ticks, so long prompts never "
                          "stall live decodes (--traffic)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: the packed --quant export "
+                         "of the model drafts K tokens per round for the "
+                         "fp target to verify (--traffic only; 0 = off)")
     args = ap.parse_args(argv)
 
+    if args.spec_k and not args.traffic:
+        raise SystemExit("--spec-k is a continuous-batching engine mode; "
+                         "run it with --traffic")
     key = jax.random.PRNGKey(args.seed)
     build = _build_rnn if args.arch in RNN_ARCH_IDS else _build_transformer
-    cfg, rt = build(args, key)
+    draft = None
+    if args.spec_k:
+        # self-speculation: the fp masters ARE the target; --quant names
+        # the DRAFT's packing (the default ternary when unset)
+        draft_mode = args.quant if args.quant != "none" else "ternary"
+        args.quant = "none"
+        cfg, rt = build(args, key)
+        draft = speculative_draft(rt, mode=draft_mode)
+        _report_bytes(draft, draft_mode)
+    else:
+        cfg, rt = build(args, key)
 
     if args.traffic:
-        return run_traffic(cfg, rt, args)
+        return run_traffic(cfg, rt, args, draft=draft)
 
     B, S = args.batch, args.prompt_len
     prompt = jax.random.randint(jax.random.fold_in(key, 1), (B, S), 0, cfg.vocab)

@@ -562,6 +562,30 @@ def prefill(params, tokens: Array, caches: dict, cfg, *,
     return _head(qparams, x, cfg)[:, 0], caches
 
 
+def verify_step(params, tokens: Array, caches: dict, cfg,
+                live: Optional[Array] = None) -> Tuple[Array, dict]:
+    """Speculative-decoding verify: one multi-token decode over the
+    candidate span.  tokens: (B, S) int32 with S = spec_k + 1 (static) ->
+    (logits (B, S, Vp), caches).
+
+    Unlike `prefill` this returns logits at EVERY position — the
+    acceptance rule needs the target distribution at each candidate — and
+    each position's head runs at the decode step's (B, 1, d) shape
+    (unrolled: S is a small static constant), because matmul rounding
+    depends on the row count and the verified stream must be bit-identical
+    to plain decoding at temperature 0.  `live` (B,) freezes dead rows'
+    cache bytes/pos exactly as in the decode tick; rollback of rejected
+    suffixes is the caller's job (kvcache.cache_spec_commit)."""
+    qparams = _serve_quant(params, cfg)
+    x = _embed(qparams, tokens, cfg)
+    x, caches, _ = _step_cached(qparams, x, caches, cfg, decode=True,
+                                xsrc=None, live=live)
+    x = L.rms_norm(x, qparams["final_norm"])
+    logits = [_head(qparams, x[:, i:i + 1], cfg)[:, 0]
+              for i in range(tokens.shape[1])]
+    return jnp.stack(logits, axis=1), caches
+
+
 def decode_step(params, token: Array, caches: dict, cfg,
                 live: Optional[Array] = None) -> Tuple[Array, dict]:
     """One decode step.  token: (B,) or (B,1) int32 -> (logits (B, Vp), caches).

@@ -30,6 +30,16 @@ Sampling is per-slot vectorized (serve/sampler.sample_slots): each slot
 carries its own temperature / top-k / PRNG key chain, and a slot's draws are
 bit-identical to running that request alone through `drive_session` — the
 engine changes the schedule, not the tokens.
+
+Speculative decoding (DESIGN.md §9) replaces the tick with a
+draft-verify-accept round: a packed binary/ternary DRAFT runtime (its own
+slot pool, prefilled and scrubbed in lockstep) proposes `spec_k` tokens per
+live slot, the target verifies them all in one multi-token step, and
+rejection sampling commits each slot's accepted prefix — the output
+distribution is exactly the target's, byte-identical to plain decoding at
+temperature 0.  Rollback of rejected suffixes reuses the slot surgery:
+per-step state SELECT for RNN families, KV suffix byte-restore + pos
+rewind for attention.
 """
 from __future__ import annotations
 
@@ -42,7 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serve.sampler import sample_slots
+from repro.serve.sampler import sample_slots, spec_accept
 
 Array = jax.Array
 
@@ -184,14 +194,20 @@ class ServeEngine:
     eng = ServeEngine(rt, vocab, slots=8, max_context=512, prefill_chunk=32)
     completions, metrics = eng.run(requests)
 
-    Invariants (DESIGN.md §7-§8):
+    Speculative mode (DESIGN.md §9) pairs the target with a packed draft:
+
+    eng = ServeEngine(rt, vocab, slots=8, max_context=512,
+                      draft=speculative_draft(rt), spec_k=4)
+
+    Invariants (DESIGN.md §7-§9):
       * mask-don't-reshape — the pool state, the token/key/temperature
         arrays and therefore the jitted tick keep shape (B, ...) forever;
         occupancy lives in a boolean mask;
       * one trace — `tick_traces` counts jit traces of the decode tick and
-        stays at 1 across arbitrary admit/retire interleavings;
-        `prefill_traces` counts chunk-prefill traces and is bounded by the
-        declared bucket set (warm() compiles them all up front);
+        stays at 1 across arbitrary admit/retire interleavings (in spec
+        mode `spec_traces` counts the draft-verify-accept round the same
+        way); `prefill_traces` counts chunk-prefill traces and is bounded
+        by the declared bucket set (warm() compiles them all up front);
       * no head-of-line blocking — at most ONE prefill chunk runs between
         decode ticks, so an admission never stalls live decodes for more
         than one chunk of work (`max_decode_stall_ticks` <= 1);
@@ -201,7 +217,8 @@ class ServeEngine:
     """
 
     def __init__(self, rt, vocab: int, *, slots: int, max_context: int,
-                 eos_id: Optional[int] = None, prefill_chunk: int = 32):
+                 eos_id: Optional[int] = None, prefill_chunk: int = 32,
+                 draft=None, spec_k: int = 0):
         if slots < 1:
             raise ValueError("need at least one slot")
         if prefill_chunk < 1:
@@ -211,6 +228,31 @@ class ServeEngine:
                 "continuous batching over cross-attention runtimes (vlm/"
                 "audio) needs per-request source encodings; the engine "
                 "currently schedules self-attention and recurrent archs")
+        if (draft is None) != (spec_k == 0) or spec_k < 0:
+            raise ValueError("speculative mode needs BOTH a draft runtime "
+                             "and spec_k >= 1 (got draft="
+                             f"{'set' if draft is not None else 'None'}, "
+                             f"spec_k={spec_k})")
+        if spec_k > 64:
+            # a verify may overshoot a slot's quota by up to spec_k cache
+            # writes; attention pools carry DECODE_MARGIN (128) slack
+            # columns past max_context, and staying well inside it keeps
+            # the non-ring write clamp from ever aliasing a LIVE row
+            raise ValueError(f"spec_k={spec_k} is past the supported draft "
+                             "span (64); deep speculation gains nothing — "
+                             "acceptance decays geometrically")
+        if draft is not None:
+            if not (getattr(rt, "spec_capable", False)
+                    and getattr(draft, "spec_capable", False)):
+                raise NotImplementedError(
+                    "speculative decoding needs an exactly-rollbackable "
+                    "multi-token step on both runtimes: RNN families and "
+                    "pure-attention non-ring archs qualify; ring-cache, "
+                    "MoE and rwkv/mamba runtimes do not (DESIGN.md §9)")
+            if getattr(draft, "family", None) != getattr(rt, "family", None):
+                raise ValueError("draft and target must be the same serving "
+                                 "family — self-speculation pairs a packed "
+                                 "export with its own fp masters")
         self.rt = rt
         self.vocab = int(vocab)
         self.n_slots = int(slots)
@@ -230,6 +272,19 @@ class ServeEngine:
         # gather/reset surgery (shapes only — no arrays are materialized)
         self._ref = jax.eval_shape(
             lambda: rt.init_state(1, self.max_context, per_slot=True))
+        # speculative mode (DESIGN.md §9): the packed draft runs its OWN
+        # slot pool in lockstep with the target's — admission prefills
+        # both, retirement scrubs both, and the spec tick rolls both back
+        # to the accepted prefix
+        self.draft = draft
+        self.spec_k = int(spec_k)
+        self.spec = draft is not None
+        if self.spec:
+            self.draft_pool = draft.init_state(self.n_slots,
+                                               self.max_context,
+                                               per_slot=True)
+            self._dref = jax.eval_shape(
+                lambda: draft.init_state(1, self.max_context, per_slot=True))
         B = self.n_slots
         self._pending = jnp.zeros((B,), jnp.int32)   # next token to feed
         self._live = jnp.zeros((B,), bool)
@@ -244,7 +299,10 @@ class ServeEngine:
         self.ticks = 0
         self.tick_traces = 0      # python counters bumped at TRACE time only
         self.prefill_traces = 0
+        self.spec_traces = 0
         self._occupancy_sum = 0.0
+        self._drafted = 0         # speculative accounting: proposed drafts
+        self._accepted = 0        # ... and how many of them survived verify
 
         def tick(pool, pending, live, keys, temp, topk):
             self.tick_traces += 1
@@ -265,15 +323,21 @@ class ServeEngine:
         cpu = jax.default_backend() == "cpu"
         self._tick = jax.jit(tick, donate_argnums=() if cpu else (0, 1, 3))
 
-        def admit_sample(logits, key, temp, topk):
+        def admit_commit(logits, key, t, k, pending, keys, temp, topk, live,
+                         slot):
             # the request's first token: same key discipline as the
-            # sequential loop (split once, sample with the second half)
+            # sequential loop (split once, sample with the second half) —
+            # plus ALL the slot-array writes the admission needs, in ONE
+            # dispatch (five eager at[].set calls used to dominate the
+            # admission cost on CPU)
             ks = jax.random.split(key)
-            tok = sample_slots(logits, ks[1][None], temperature=temp[None],
-                               top_k=topk[None], vocab=self.vocab)[0]
-            return tok, ks[0]
+            tok = sample_slots(logits, ks[1][None], temperature=t[None],
+                               top_k=k[None], vocab=self.vocab)[0]
+            return (tok, pending.at[slot].set(tok), keys.at[slot].set(ks[0]),
+                    temp.at[slot].set(t), topk.at[slot].set(k),
+                    live.at[slot].set(True))
 
-        self._admit_sample = jax.jit(admit_sample)
+        self._admit_commit = jax.jit(admit_commit)
 
         write = rt.write_slots if hasattr(rt, "write_slots") else tree_write_slot
 
@@ -289,11 +353,115 @@ class ServeEngine:
         self._prefill_slot = jax.jit(
             prefill_slot, donate_argnums=() if cpu else (0,))
         # retire-time slot scrub, shape-aware: recurrent leaves + positions
-        # to zero, attention KV masked in place — the freed row must read
-        # as fresh because the next prefill resumes from it
+        # to zero, attention KV masked in place, the device live bit
+        # cleared — the freed row must read as fresh because the next
+        # prefill resumes from it
         self._reset = jax.jit(
-            lambda pool, mask: tree_reset_slots(pool, self._ref, mask),
+            lambda pool, live, mask: (
+                tree_reset_slots(pool, self._ref, mask),
+                jnp.where(mask, False, live)),
             donate_argnums=() if cpu else (0,))
+
+        if not self.spec:
+            return
+
+        # -- speculative mode: draft k, verify k+1, accept, commit ----------
+        K = self.spec_k
+
+        def spec_tick(pool, dpool, pending, live, keys, temp, topk):
+            """One draft-verify-accept round over ALL live slots, jitted as
+            a unit (traces exactly once — asserted like the plain tick):
+
+              1. the packed draft proposes K tokens per slot: a scan of
+                 K+1 batched draft decode steps (the last one advances the
+                 draft through its own K-th proposal so a fully-accepted
+                 round leaves the draft in sync), sampling proposals with
+                 each slot's own temperature/top-k;
+              2. the target verifies all candidates in ONE multi-token
+                 step — `rt.verify` returns logits at every position;
+              3. `spec_accept` runs the rejection rule per slot: the
+                 output distribution is exactly the target's, and at
+                 temperature 0 the emitted bytes are plain greedy decode;
+              4. both pools COMMIT to each slot's accepted prefix:
+                 per-step-state select for RNN families, KV suffix
+                 restore + pos rewind for attention (the PR 3/4 slot
+                 surgery, turned into a rollback primitive).
+
+            Dead slots (empty or mid-prefill) stay bit-frozen: their
+            decode rows are masked, their accepted count is forced to 0
+            (commit restores their pre-round state exactly), and their
+            pending/key chains never advance."""
+            self.spec_traces += 1
+            ks = jax.vmap(jax.random.split)(keys)          # (B, 2, 2)
+            rk = ks[:, 1]
+            new_keys = jnp.where(live[:, None], ks[:, 0], keys)
+            dkeys = jax.vmap(
+                lambda k: jax.random.split(jax.random.fold_in(k, 1),
+                                           K + 1))(rk)     # (B, K+1, 2)
+            akeys = jax.vmap(jax.random.fold_in,
+                             in_axes=(0, None))(rk, 2)     # (B, 2)
+
+            dsnap = draft.spec_snapshot(dpool, K + 1)
+
+            def dbody(carry, step_keys):
+                dst, tok = carry
+                lg, dst = draft.decode_fn(tok, dst, live)
+                nxt = sample_slots(lg, step_keys, temperature=temp,
+                                   top_k=topk, vocab=self.vocab)
+                nxt = jnp.where(live, nxt, tok)
+                return (dst, nxt), (lg, nxt, draft.spec_emit(dst))
+
+            (dafter, _), (qlg, dtoks, demits) = jax.lax.scan(
+                dbody, (dpool, pending), jnp.swapaxes(dkeys, 0, 1))
+            drafts = jnp.swapaxes(dtoks[:K], 0, 1)         # (B, K)
+            q_logits = jnp.swapaxes(qlg[:K], 0, 1)         # (B, K, V)
+
+            vtokens = jnp.concatenate([pending[:, None], drafts], axis=1)
+            vsnap = rt.spec_snapshot(pool, K + 1)
+            p_logits, vafter, vemits = rt.verify(vtokens, pool, live)
+
+            n_acc, out = spec_accept(p_logits, q_logits, drafts, akeys,
+                                     temperature=temp, top_k=topk,
+                                     vocab=self.vocab)
+            n_acc = jnp.where(live, n_acc, 0)
+            pool = rt.spec_commit(pool, vafter, vsnap, vemits, n_acc)
+            dpool = draft.spec_commit(dpool, dafter, dsnap, demits, n_acc)
+            nxt_p = jnp.take_along_axis(
+                out, jnp.maximum(n_acc - 1, 0)[:, None], axis=1)[:, 0]
+            pending = jnp.where(live, nxt_p, pending)
+            # ONE host-bound array per round: emitted tokens with the
+            # accepted count in the last column (a second small transfer
+            # costs as much as the whole verify at reduced scale)
+            packed = jnp.concatenate([out, n_acc[:, None]], axis=1)
+            return pool, dpool, pending, new_keys, packed
+
+        self._spec_tick = jax.jit(
+            spec_tick, donate_argnums=() if cpu else (0, 1, 2, 4))
+
+        dwrite = (draft.write_slots if hasattr(draft, "write_slots")
+                  else tree_write_slot)
+
+        def spec_prefill_slot(pool, dpool, tokens, n, slot):
+            # same in-slot chunk as the plain path, run against BOTH pools
+            # in one jitted region — the draft must carry the same prompt
+            # state as the target or its proposals start from nowhere.
+            # Trace-bounded by the same bucket set (one counter).
+            self.prefill_traces += 1
+            sub = tree_gather_slot(pool, self._ref, slot)
+            logits, sub = rt.prefill_chunk(tokens, sub, n)
+            dsub = tree_gather_slot(dpool, self._dref, slot)
+            _, dsub = draft.prefill_chunk(tokens, dsub, n)
+            return (logits, write(pool, sub, slot),
+                    dwrite(dpool, dsub, slot))
+
+        self._spec_prefill_slot = jax.jit(
+            spec_prefill_slot, donate_argnums=() if cpu else (0, 1))
+        self._spec_reset = jax.jit(
+            lambda pool, dpool, live, mask: (
+                tree_reset_slots(pool, self._ref, mask),
+                tree_reset_slots(dpool, self._dref, mask),
+                jnp.where(mask, False, live)),
+            donate_argnums=() if cpu else (0, 1))
 
     # -- admission ----------------------------------------------------------
 
@@ -354,14 +522,19 @@ class ServeEngine:
         --traffic launcher and the benchmark so both measure the same
         warmed serving path."""
         for Lb in self.declared_buckets(prompt_lens):
-            _, self.pool = self._prefill_slot(
-                self.pool, jnp.zeros((1, Lb), jnp.int32),
-                jnp.int32(Lb), jnp.int32(0))
+            if self.spec:
+                _, self.pool, self.draft_pool = self._spec_prefill_slot(
+                    self.pool, self.draft_pool, jnp.zeros((1, Lb), jnp.int32),
+                    jnp.int32(Lb), jnp.int32(0))
+            else:
+                _, self.pool = self._prefill_slot(
+                    self.pool, jnp.zeros((1, Lb), jnp.int32),
+                    jnp.int32(Lb), jnp.int32(0))
         # the warm prefills ran junk through slot 0 — scrub it so the pool
         # is indistinguishable from fresh before any real admission
         mask = np.zeros(self.n_slots, bool)
         mask[0] = True
-        self.pool = self._reset(self.pool, jnp.asarray(mask))
+        self._scrub(mask)
         # a throwaway request exercises admit + sample + the tick and
         # leaves every slot idle again; max_tokens respects tiny contexts
         n = min(2, self.max_context - 1)
@@ -405,29 +578,36 @@ class ServeEngine:
         slot = self._prefill_q[0]
         act = self._active[slot]
         chunk, n = act.chunks.popleft()
-        logits, self.pool = self._prefill_slot(
-            self.pool, jnp.asarray(chunk)[None], jnp.int32(n),
-            jnp.int32(slot))
+        if self.spec:
+            logits, self.pool, self.draft_pool = self._spec_prefill_slot(
+                self.pool, self.draft_pool, jnp.asarray(chunk)[None],
+                jnp.int32(n), jnp.int32(slot))
+        else:
+            logits, self.pool = self._prefill_slot(
+                self.pool, jnp.asarray(chunk)[None], jnp.int32(n),
+                jnp.int32(slot))
         if act.chunks:
             return 0, None, None
         self._prefill_q.popleft()
         req = act.req
-        tok0, key = self._admit_sample(
+        (tok0, self._pending, self._keys, self._temp, self._topk,
+         self._live) = self._admit_commit(
             logits, jax.random.PRNGKey(req.seed),
-            jnp.float32(req.temperature), jnp.int32(req.top_k))
+            jnp.float32(req.temperature), jnp.int32(req.top_k),
+            self._pending, self._keys, self._temp, self._topk, self._live,
+            jnp.int32(slot))
         act.tokens.append(int(tok0))
         act.t_first = time.perf_counter() - t0
         if (req.max_tokens <= 1
                 or (self.eos_id is not None and act.tokens[0] == self.eos_id)):
+            # completed at admission: the device-side live bit was set by
+            # the fused commit, and the caller's retired-mask scrub clears
+            # it this same scheduler iteration (_live_host stays False, so
+            # no host path ever reads the slot as live)
             comp = self._completion(act, slot, act.t_first)
             self._active[slot] = None
             return 1, comp, slot
-        self._pending = self._pending.at[slot].set(tok0)
-        self._keys = self._keys.at[slot].set(key)
-        self._temp = self._temp.at[slot].set(req.temperature)
-        self._topk = self._topk.at[slot].set(req.top_k)
         self._live_host[slot] = True
-        self._live = self._live.at[slot].set(True)
         return 1, None, None
 
     def _completion(self, act: _Active, slot: int, now: float) -> Completion:
@@ -442,9 +622,21 @@ class ServeEngine:
             t_done=now)
 
     def _retire(self, slot: int) -> None:
+        # host bookkeeping only: the device-side live bit clears in the
+        # iteration's batched _scrub (one jitted call for all retirements)
         self._active[slot] = None
         self._live_host[slot] = False
-        self._live = self._live.at[slot].set(False)
+
+    def _scrub(self, retired: np.ndarray) -> None:
+        """Batched shape-aware reset of the freed slots — state rows, the
+        device live mask, and the draft pool's matching rows in speculative
+        mode (the next occupant prefills into BOTH pools)."""
+        m = jnp.asarray(retired)
+        if self.spec:
+            self.pool, self.draft_pool, self._live = self._spec_reset(
+                self.pool, self.draft_pool, self._live, m)
+        else:
+            self.pool, self._live = self._reset(self.pool, self._live, m)
 
     # -- the run loop -------------------------------------------------------
 
@@ -462,6 +654,7 @@ class ServeEngine:
         t0 = time.perf_counter()
         gen_tokens = 0
         ticks0, occ0 = self.ticks, self._occupancy_sum  # per-run deltas
+        drafted0, accepted0 = self._drafted, self._accepted
         # decode-stall accounting: chunks an admission ran since the last
         # decode tick while live decodes were waiting.  The scheduler's
         # contract is that this never exceeds ONE chunk per admission.
@@ -493,7 +686,7 @@ class ServeEngine:
 
             if not self._live_host.any():
                 if retired.any():
-                    self.pool = self._reset(self.pool, jnp.asarray(retired))
+                    self._scrub(retired)
                 if not self._prefill_q and queue and realtime:
                     # idle until the next arrival
                     wait = queue[0].arrival_s - (time.perf_counter() - t0)
@@ -501,9 +694,15 @@ class ServeEngine:
                         time.sleep(min(wait, 0.05))
                 continue
 
-            self.pool, self._pending, self._keys = self._tick(
-                self.pool, self._pending, self._live, self._keys,
-                self._temp, self._topk)
+            if self.spec:
+                (self.pool, self.draft_pool, self._pending, self._keys,
+                 spec_out) = self._spec_tick(
+                    self.pool, self.draft_pool, self._pending, self._live,
+                    self._keys, self._temp, self._topk)
+            else:
+                self.pool, self._pending, self._keys = self._tick(
+                    self.pool, self._pending, self._live, self._keys,
+                    self._temp, self._topk)
             self.ticks += 1
             if stall_pending:
                 stall_max = max(stall_max, max(stall_pending.values()))
@@ -513,26 +712,52 @@ class ServeEngine:
             # occupancy counts it — same "slot is taken" meaning as before
             # chunked prefill, when admission held the slot synchronously
             self._occupancy_sum += (n_live + len(self._prefill_q)) / self.n_slots
-            gen_tokens += n_live
 
             # one small device->host transfer per tick: the scheduler needs
             # the sampled ids to detect EOS / quota and to free slots
-            toks = np.asarray(self._pending)
             now = time.perf_counter() - t0
-            for slot in np.flatnonzero(self._live_host):
-                act = self._active[slot]
-                act.tokens.append(int(toks[slot]))
-                hit_eos = (self.eos_id is not None
-                           and act.tokens[-1] == self.eos_id)
-                if hit_eos or len(act.tokens) >= act.req.max_tokens:
-                    completions.append(self._completion(act, int(slot), now))
-                    self._retire(int(slot))
-                    retired[slot] = True
+            if self.spec:
+                # a spec round emits a VARIABLE number of tokens per slot
+                # (accepted prefix + one); truncate at EOS / quota — the
+                # overshoot the verify consumed dies with the slot scrub
+                out_host = np.asarray(spec_out)
+                for slot in np.flatnonzero(self._live_host):
+                    act = self._active[slot]
+                    take = int(out_host[slot, -1])
+                    self._drafted += self.spec_k
+                    self._accepted += max(take - 1, 0)
+                    done = False
+                    for j in range(take):
+                        act.tokens.append(int(out_host[slot, j]))
+                        gen_tokens += 1
+                        hit_eos = (self.eos_id is not None
+                                   and act.tokens[-1] == self.eos_id)
+                        if hit_eos or len(act.tokens) >= act.req.max_tokens:
+                            done = True
+                            break
+                    if done:
+                        completions.append(
+                            self._completion(act, int(slot), now))
+                        self._retire(int(slot))
+                        retired[slot] = True
+            else:
+                gen_tokens += n_live
+                toks = np.asarray(self._pending)
+                for slot in np.flatnonzero(self._live_host):
+                    act = self._active[slot]
+                    act.tokens.append(int(toks[slot]))
+                    hit_eos = (self.eos_id is not None
+                               and act.tokens[-1] == self.eos_id)
+                    if hit_eos or len(act.tokens) >= act.req.max_tokens:
+                        completions.append(
+                            self._completion(act, int(slot), now))
+                        self._retire(int(slot))
+                        retired[slot] = True
             if retired.any():
                 # scrub the freed slots in ONE batched shape-aware reset:
                 # the next occupant prefills IN the slot, so it must read
                 # exactly like a fresh one
-                self.pool = self._reset(self.pool, jnp.asarray(retired))
+                self._scrub(retired)
 
         if stall_pending:  # prefill work after the last decode tick
             stall_max = max(stall_max, max(stall_pending.values()))
@@ -559,4 +784,18 @@ class ServeEngine:
             "prefill_traces": self.prefill_traces,  # invariants are ==1 and
             "occupancy": occ / ticks if ticks else 0.0,  # <= bucket count
         }
+        if self.spec:
+            drafted = self._drafted - drafted0
+            accepted = self._accepted - accepted0
+            metrics.update({
+                "spec_k": self.spec_k,
+                "spec_rounds": ticks,      # every tick is a spec round
+                "spec_traces": self.spec_traces,  # cumulative: invariant ==1
+                "drafted_tokens": drafted,
+                "accepted_drafts": accepted,
+                "accept_rate": accepted / drafted if drafted else 0.0,
+                # drafted/s measures the packed proposer's raw speed; the
+                # headline agg_tok_s is emitted (target-quality) tokens/s
+                "draft_tok_s": drafted / wall if wall > 0 else 0.0,
+            })
         return completions, metrics

@@ -252,3 +252,79 @@ def cache_reset_slots(c: AttnCache, mask: Array) -> AttnCache:
     k/v bytes are left in place — mask-don't-reshape keeps the decode step's
     shapes (and its jit trace) occupancy-independent."""
     return c._replace(pos=jnp.where(mask, 0, c.pos))
+
+
+# ---------------------------------------------------------------------------
+# speculative-decoding suffix rewind (DESIGN.md §9): a verify step writes a
+# span of K+1 candidate tokens at each slot's own depth; rejection rolls the
+# suffix back.  Unlike bucket-pad rewind (pos arithmetic only), spec rollback
+# also RESTORES the overwritten bytes from a pre-verify snapshot, so a
+# rolled-back cache is bit-identical to one that never saw the rejected
+# tokens — the rollback tests assert tree equality, not just masking.
+# Non-ring caches only (a ring write could recycle in-window history, which
+# no snapshot of the target span can restore); the engine gates speculative
+# mode on `pad_buckets`, which encodes exactly "every cache is non-ring".
+# ---------------------------------------------------------------------------
+
+
+class SpecSnap(NamedTuple):
+    """Rollback material for one AttnCache node: the k/v bytes the next
+    `span` writes will overwrite (gathered at [pos, pos+span) per row) and
+    the pre-verify positions."""
+    k: Array
+    v: Array
+    pos: Array
+
+
+def _span_slots(pos: Array, span: int, cap: int) -> Array:
+    """(B, span) write slots of the next `span` tokens per row, clamped
+    in-bounds like `_update_per_slot`'s non-ring append."""
+    return jnp.clip(pos[:, None] + jnp.arange(span, dtype=jnp.int32),
+                    0, cap - 1)
+
+
+def cache_spec_snapshot(c: AttnCache, span: int) -> SpecSnap:
+    """Gather the bytes a `span`-token verify is about to overwrite.  Works
+    on a bare per-slot cache ((B, cap, H, hd), pos (B,)) and on a
+    layer-stacked leaf ((L, B, cap, H, hd), pos (L, B)) via vmap."""
+    if c.ring:
+        raise ValueError("speculative rollback needs a non-ring cache "
+                         "(a ring write recycles in-window history)")
+
+    def one(k, v, pos):
+        rows = jnp.arange(k.shape[0], dtype=jnp.int32)[:, None]
+        slot = _span_slots(pos, span, k.shape[1])
+        return k[rows, slot], v[rows, slot]
+
+    if c.pos.ndim == 2:
+        ks, vs = jax.vmap(one)(c.k, c.v, c.pos)
+    else:
+        ks, vs = one(c.k, c.v, c.pos)
+    return SpecSnap(k=ks, v=vs, pos=c.pos)
+
+
+def cache_spec_commit(c: AttnCache, snap: SpecSnap, keep: Array) -> AttnCache:
+    """Commit `keep` (B,) of the span written since `snap` and roll the
+    rest back: bytes past pos0+keep are restored from the snapshot and pos
+    rewinds to pos0 + keep.  keep = 0 restores the snapshot bit-for-bit
+    (reject-everything / dead-slot no-op); keep = span commits the whole
+    verify.  The result is bit-identical to a cache that only ever wrote
+    the accepted prefix."""
+    # snapshot leaf mirrors the cache leaf with the cap axis narrowed to the
+    # span: (B, span, H, hd) bare, (L, B, span, H, hd) stacked
+    span = snap.k.shape[-3]
+
+    def one(k, v, pos, sk, sv):
+        rows = jnp.arange(k.shape[0], dtype=jnp.int32)[:, None]
+        slot = _span_slots(pos, span, k.shape[1])
+        m = (jnp.arange(span) < keep[:, None])[..., None, None]
+        k = k.at[rows, slot].set(jnp.where(m, k[rows, slot], sk))
+        v = v.at[rows, slot].set(jnp.where(m, v[rows, slot], sv))
+        return k, v
+
+    if c.pos.ndim == 2:
+        k, v = jax.vmap(one, in_axes=(0, 0, 0, 0, 0))(
+            c.k, c.v, snap.pos, snap.k, snap.v)
+    else:
+        k, v = one(c.k, c.v, snap.pos, snap.k, snap.v)
+    return constrain_cache(c._replace(k=k, v=v, pos=snap.pos + keep))

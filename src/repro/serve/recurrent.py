@@ -59,14 +59,20 @@ class RNNRuntime:
     # engine compiles one prefill trace per power-of-two bucket, ever.
     chunk_granularity = "token"
     pad_buckets = True
+    # speculative decoding (DESIGN.md §9): verify is a scan of the exact
+    # decode-step body, rollback a per-step-state SELECT — always exact.
+    spec_capable = True
 
     def __init__(self, cfg: BL.RNNConfig, variables: dict, *,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None, dense_tables: bool = False):
         self.cfg = cfg
         self.variables = variables
         self._interpret = interpret
+        self._dense_tables = dense_tables
         # once per session: dequantized layer-0 rows, BN affines, gate codes
-        self.tables = BL.rnn_decode_tables(variables, cfg)
+        # (dense_tables additionally expands packed weights — see
+        # rnn_decode_tables; the speculative draft uses it on CPU)
+        self.tables = BL.rnn_decode_tables(variables, cfg, dense=dense_tables)
         def prefill_last(v, tb, toks, st):
             # take the last-token logits from the carried state through the
             # shared (B, 1, H) head (rnn_logits_last): XLA never
@@ -110,6 +116,35 @@ class RNNRuntime:
     def write_slots(self, state: BL.RNNState, sub: BL.RNNState, slots):
         return BL.rnn_write_slots(state, sub, slots)
 
+    # -- speculative decoding (DESIGN.md §9) --------------------------------
+    # The RNN's rollback story is the O(1) state again: every step of a
+    # draft/verify span EMITS its (h, c) carry, and committing n tokens is a
+    # per-slot select over the emitted stack — no byte surgery, n = 0 IS the
+    # pre-span state.  spec_snapshot therefore has nothing to save.
+
+    def spec_snapshot(self, state: BL.RNNState, span: int):
+        del state, span
+        return ()
+
+    def spec_emit(self, state: BL.RNNState):
+        """Per-step rollback material emitted inside the engine's draft
+        scan: the carried h/c stacks (pos is recomputed at commit)."""
+        return (state.h, state.c)
+
+    def verify(self, tokens: Array, state: BL.RNNState,
+               live: Optional[Array] = None):
+        """Multi-token target step (unjitted body — the engine jits the
+        whole spec tick): (B, T) tokens -> (logits (B, T, V), end state,
+        per-step emits).  Bit-identical per position to T decode steps."""
+        return BL.rnn_verify(self.variables, tokens, self.cfg, state,
+                             tables=self.tables, live=live,
+                             interpret=self._interpret)
+
+    def spec_commit(self, state0: BL.RNNState, state_after: BL.RNNState,
+                    snap, emits, n: Array) -> BL.RNNState:
+        del state_after, snap
+        return BL.rnn_spec_commit(state0, emits, n)
+
     def param_nbytes(self) -> tuple[int, int]:
         return tree_nbytes(self.variables["params"])
 
@@ -142,6 +177,14 @@ class TransformerRuntime:
         self.chunk_granularity = "whole" if whole else "token"
         self.pad_buckets = (not whole) and not cfg.swa_all and \
             "local" not in kinds
+        # speculative decoding needs (a) a multi-token step that is
+        # per-token exact (token granularity: rules out MoE capacity
+        # competition and rwkv/mamba internal scan re-chunking) and (b)
+        # non-ring caches so a rejected suffix can be rolled back without
+        # having recycled in-window history — exactly the pad_buckets
+        # predicate.
+        self.spec_capable = self.chunk_granularity == "token" and \
+            self.pad_buckets
 
     def init_state(self, batch: int, context: int, *,
                    per_slot: bool = False):
@@ -171,6 +214,40 @@ class TransformerRuntime:
         bucket padding past `n` is rewound off the attention pos."""
         return T.prefill(self.params, tokens, state, self.cfg, n=n)
 
+    # -- speculative decoding (DESIGN.md §9) --------------------------------
+    # Rollback here is byte surgery on the caches: snapshot the span of
+    # k/v bytes a draft/verify is about to overwrite, and commit restores
+    # the rejected suffix and rewinds each slot's pos — the committed cache
+    # is bit-identical to one that only ever saw the accepted prefix.
+
+    def _is_cache(self, x) -> bool:
+        from repro.serve.kvcache import AttnCache
+        return isinstance(x, AttnCache)
+
+    def spec_snapshot(self, state, span: int):
+        from repro.serve.kvcache import cache_spec_snapshot
+        return jax.tree.map(lambda c: cache_spec_snapshot(c, span),
+                            state, is_leaf=self._is_cache)
+
+    def spec_emit(self, state):
+        del state  # the snapshot carries all rollback material
+        return ()
+
+    def verify(self, tokens: Array, state, live: Optional[Array] = None):
+        """Multi-token target step (unjitted body — the engine jits the
+        whole spec tick): (B, T) tokens -> (logits (B, T, V), caches, ()).
+        Per-position logits through the decode head shape; bit-identical
+        per position to T decode steps (tests/test_spec_decode.py)."""
+        logits, state = T.verify_step(self.params, tokens, state, self.cfg,
+                                      live=live)
+        return logits, state, ()
+
+    def spec_commit(self, state0, state_after, snap, emits, n: Array):
+        del state0, emits
+        from repro.serve.kvcache import cache_spec_commit
+        return jax.tree.map(lambda c, s: cache_spec_commit(c, s, n),
+                            state_after, snap, is_leaf=self._is_cache)
+
     def param_nbytes(self) -> tuple[int, int]:
         return tree_nbytes(self.params)
 
@@ -181,6 +258,55 @@ def serving_runtime(cfg, params, **kw):
     if isinstance(cfg, BL.RNNConfig):
         return RNNRuntime(cfg, params, **kw)
     return TransformerRuntime(cfg, params, **kw)
+
+
+def speculative_draft(rt, mode: str = "ternary",
+                      dense: Optional[bool] = None):
+    """Self-speculation pairing (DESIGN.md §9): pack the target runtime's
+    OWN master weights into a binary/ternary draft runtime.
+
+    The paper's whole hardware argument — packed weights decode ~10x faster
+    in ~12x less memory — is the profile of an ideal draft model, and
+    because the draft is a QTensor export of the very tree the fp target
+    serves, the two track closely and acceptance stays high.  The returned
+    runtime shares the target's config dims (and, for the RNN, its frozen
+    BN statistics), so the engine can drive both pools through identical
+    prefill plans.
+
+    `dense` (RNN drafts): expand the packed weights into dense decode
+    tables once per session.  Defaults to True on CPU, where the packed
+    Pallas kernels run in interpret mode (emulated — slower than the dense
+    math they replace) and the draft's job is raw step latency; on real
+    accelerators the default keeps the fused packed kernel."""
+    import dataclasses
+
+    from repro.core.qtensor import export_packed, is_qtensor
+    from repro.core.quantize import QuantSpec
+
+    if isinstance(rt, RNNRuntime):
+        wx0 = rt.variables["params"]["layers"][0]["wx"]
+        if is_qtensor(wx0):
+            raise ValueError(
+                "speculative pairing packs the target's fp masters; this "
+                "runtime already serves a packed tree — build the pair "
+                "from the master weights instead")
+        if dense is None:
+            dense = jax.default_backend() == "cpu"
+        dcfg = dataclasses.replace(
+            rt.cfg, quant=QuantSpec(mode=mode, norm="batch"))
+        packed = BL.export_packed_rnn(rt.variables["params"], dcfg)
+        return RNNRuntime(dcfg, {"params": packed,
+                                 "state": rt.variables["state"]},
+                          interpret=rt._interpret, dense_tables=dense)
+    if any(is_qtensor(l) for l in jax.tree_util.tree_leaves(
+            rt.params, is_leaf=is_qtensor)):
+        raise ValueError(
+            "speculative pairing packs the target's fp masters; this "
+            "runtime already serves a packed tree — build the pair from "
+            "the master weights instead")
+    dcfg = rt.cfg.with_quant(QuantSpec(mode=mode, norm="channel"))
+    return TransformerRuntime(dcfg, export_packed(rt.params, dcfg.quant),
+                              extras=dict(rt.extras))
 
 
 def drive_session(rt, prompt: Array, vocab: int, *, gen: int,

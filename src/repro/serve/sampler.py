@@ -6,6 +6,16 @@ form the continuous-batching engine uses: every slot carries its own
 temperature, top-k and PRNG key, and a slot's draw is bit-identical to what
 `sample` would produce for that request alone — that equivalence is what
 makes engine-vs-sequential token parity possible (tests/test_serve_engine.py).
+
+The speculative-decoding half (DESIGN.md §9) lives here too:
+`filtered_probs` turns per-slot logits into the EXACT distribution
+`sample_slots` draws from (a one-hot at temperature <= 0), `residual_probs`
+is the Leviathan rejection-sampling residual max(p-q, 0)/Z, and
+`spec_accept` applies the accept-while-`u < p/q` rule across a whole batch
+of slots at once.  Because the temp-0 distributions are exact one-hots, the
+generic rule degenerates to "accept iff the draft matched the target's
+argmax, resample = the argmax" — greedy speculative decoding is byte-
+identical to plain greedy decoding with no special case in the engine.
 """
 from __future__ import annotations
 
@@ -34,6 +44,29 @@ def sample(logits: Array, key: Array, *, temperature: float = 1.0,
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
 
 
+def _filtered(logits: Array, temperature: Array, top_k: Array,
+              vocab: int = 0):
+    """The per-slot filtering pipeline shared by `sample_slots` and
+    `filtered_probs`: vocab mask, temperature scaling, sort-based top-k.
+    Returns (final masked/scaled logits, per-slot greedy argmax) — the
+    greedy comes from the vocab-masked logits BEFORE temperature/top-k,
+    exactly what a temperature<=0 slot samples."""
+    V = logits.shape[-1]
+    neg = jnp.finfo(logits.dtype).min
+    if vocab and V > vocab:
+        logits = jnp.where(jnp.arange(V) < vocab, logits, neg)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    t = temperature.astype(logits.dtype)[:, None]
+    scaled = logits / jnp.where(t > 0, t, jnp.ones_like(t))
+    desc = -jnp.sort(-scaled, axis=-1)  # descending: desc[:, k-1] = kth largest
+    kth = jnp.take_along_axis(
+        desc, jnp.clip(top_k - 1, 0, V - 1)[:, None], axis=-1)
+    filtered = jnp.where(scaled >= kth, scaled, neg)
+    final = jnp.where((top_k > 0)[:, None], filtered, scaled)
+    return final, greedy
+
+
 def sample_slots(logits: Array, keys: Array, *, temperature: Array,
                  top_k: Array, vocab: int = 0) -> Array:
     """Per-slot sampling: logits (B, V), keys (B, 2), temperature (B,) fp,
@@ -48,18 +81,105 @@ def sample_slots(logits: Array, keys: Array, *, temperature: Array,
     depend only on the flat element count, and (1, V) flattens to (V,)).
     temperature <= 0 means greedy for that slot; top_k <= 0 disables the
     top-k filter for that slot."""
-    V = logits.shape[-1]
-    neg = jnp.finfo(logits.dtype).min
-    if vocab and V > vocab:
-        logits = jnp.where(jnp.arange(V) < vocab, logits, neg)
-    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-
-    t = temperature.astype(logits.dtype)[:, None]
-    scaled = logits / jnp.where(t > 0, t, jnp.ones_like(t))
-    desc = -jnp.sort(-scaled, axis=-1)  # descending: desc[:, k-1] = kth largest
-    kth = jnp.take_along_axis(
-        desc, jnp.clip(top_k - 1, 0, V - 1)[:, None], axis=-1)
-    filtered = jnp.where(scaled >= kth, scaled, neg)
-    final = jnp.where((top_k > 0)[:, None], filtered, scaled)
+    final, greedy = _filtered(logits, temperature, top_k, vocab)
     drawn = jax.vmap(lambda k, l: jax.random.categorical(k, l))(keys, final)
     return jnp.where(temperature > 0, drawn.astype(jnp.int32), greedy)
+
+
+# ---------------------------------------------------------------------------
+# speculative decoding: rejection-sampling acceptance (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+def filtered_probs(logits: Array, temperature: Array, top_k: Array,
+                   vocab: int = 0) -> Array:
+    """The probability distribution `sample_slots` actually draws from:
+    softmax of the vocab-masked, temperature-scaled, top-k-filtered logits
+    per slot, and an EXACT one-hot at the greedy argmax where
+    temperature <= 0.  logits (B, V) -> probs (B, V) float32.
+
+    The one-hot is what makes greedy speculation byte-exact: with p and q
+    both one-hots, the accept ratio p(d)/q(d) is exactly 1 or 0 and the
+    residual collapses to the target argmax, so the generic rejection rule
+    IS plain greedy decoding."""
+    final, greedy = _filtered(logits.astype(jnp.float32), temperature,
+                              top_k, vocab)
+    probs = jax.nn.softmax(final, axis=-1)
+    onehot = jax.nn.one_hot(greedy, logits.shape[-1], dtype=probs.dtype)
+    return jnp.where((temperature > 0)[:, None], probs, onehot)
+
+
+def residual_probs(p: Array, q: Array) -> Array:
+    """The rejection-sampling residual distribution norm(max(p - q, 0)).
+
+    p, q: (..., V) probability rows.  Where the residual has zero mass
+    (p == q up to rounding — a rejection there has probability ~0 but a
+    float `u` can still land on it), fall back to p itself so the draw
+    stays a valid sample from the target."""
+    r = jnp.maximum(p - q, 0.0)
+    s = jnp.sum(r, axis=-1, keepdims=True)
+    return jnp.where(s > 0, r / jnp.where(s > 0, s, 1.0), p)
+
+
+def categorical_slots(keys: Array, probs: Array) -> Array:
+    """Per-slot categorical draw from PROBABILITY rows (not logits):
+    probs (B, V), keys (B, 2) -> (B,) int32.  A one-hot row draws its hot
+    index with probability 1 (log turns the zeros into -inf)."""
+    drawn = jax.vmap(lambda k, p: jax.random.categorical(k, jnp.log(p)))(
+        keys, probs)
+    return drawn.astype(jnp.int32)
+
+
+def spec_accept(p_logits: Array, q_logits: Array, drafts: Array, keys: Array,
+                *, temperature: Array, top_k: Array, vocab: int = 0):
+    """Leviathan-style accept/reject over a batch of slots.
+
+    p_logits: (B, K+1, V) target logits at every verify position (position
+              K is the bonus position after all K drafts);
+    q_logits: (B, K, V)  draft logits the proposals were sampled from;
+    drafts:   (B, K)     proposed tokens;
+    keys:     (B, 2)     per-slot round keys;
+    temperature/top_k: (B,) per-slot sampling params (the SAME filtering is
+              applied to p and q, so the accepted stream follows the
+              target's post-filter sampling distribution exactly).
+
+    Returns (n_acc (B,) int32, out (B, K+1) int32): slot b emits
+    out[b, :n_acc[b]] — its accepted draft prefix plus ONE trailing token
+    (the residual resample at the first rejection, or the bonus draw when
+    every draft survived).  1 <= n_acc <= K+1 always: a verify step never
+    emits zero tokens.  Entries past n_acc are junk and must not be read."""
+    B, Kp1, V = p_logits.shape
+    K = Kp1 - 1
+    per_pos = jax.vmap(
+        lambda lg: filtered_probs(lg, temperature, top_k, vocab),
+        in_axes=1, out_axes=1)
+    P = per_pos(p_logits)                      # (B, K+1, V)
+    Q = per_pos(q_logits)                      # (B, K, V)
+
+    ks = jax.vmap(lambda k: jax.random.split(k, 3))(keys)      # (B, 3, 2)
+    u = jax.vmap(lambda k: jax.random.uniform(k, (K,)))(ks[:, 0])
+
+    pd = jnp.take_along_axis(P[:, :K], drafts[..., None], axis=-1)[..., 0]
+    qd = jnp.take_along_axis(Q, drafts[..., None], axis=-1)[..., 0]
+    # u < p(d)/q(d), written divide-free: P(accept) = min(1, p/q) exactly,
+    # and q(d) = 0 (junk rows) rejects instead of dividing by zero.  With
+    # one-hot p/q the ratio is exactly 1 or 0, and uniform u in [0, 1)
+    # always accepts ratio 1 — greedy acceptance is deterministic.
+    accept = u * qd < pd                                       # (B, K)
+    n_d = jnp.cumprod(accept.astype(jnp.int32), axis=1).sum(axis=1)
+    n_acc = n_d + 1
+
+    # the trailing token: residual resample at the first rejected position,
+    # or the bonus draw from the position-K target distribution
+    pos = jnp.minimum(n_d, K - 1)[:, None, None]
+    p_rej = jnp.take_along_axis(P[:, :K], pos, axis=1)[:, 0]   # (B, V)
+    q_rej = jnp.take_along_axis(Q, pos, axis=1)[:, 0]
+    t_res = categorical_slots(ks[:, 1], residual_probs(p_rej, q_rej))
+    t_bonus = categorical_slots(ks[:, 2], P[:, K])
+    final = jnp.where(n_d == K, t_bonus, t_res)
+
+    cols = jnp.arange(K + 1, dtype=n_d.dtype)[None]
+    dpad = jnp.concatenate(
+        [drafts, jnp.zeros((B, 1), drafts.dtype)], axis=1)
+    out = jnp.where(cols == n_d[:, None], final[:, None], dpad)
+    return n_acc.astype(jnp.int32), out.astype(jnp.int32)

@@ -19,6 +19,14 @@ matter how many workloads it has drained.
 Families covered: the paper's BN-LSTM full-precision and packed-ternary
 (fused Pallas decode kernel), and a transformer-pool attention arch
 (qwen3-0.6b) — 21 scenarios total.
+
+The speculative half (DESIGN.md §9) rides the same harness: seeded
+mixed-traffic scenarios at temperature 0 through a SPECULATIVE engine
+(packed-ternary draft proposing for an fp target) must be byte-identical to
+both the plain engine and the `drive_session` oracle — draft quality,
+acceptance churn, per-round token counts and rollbacks change the schedule,
+never a byte.  Spec engines are cached per (family, slots, chunk, k) and
+assert `spec_traces == 1` for their whole life.
 """
 import dataclasses
 import random
@@ -33,7 +41,8 @@ from repro.core import bnlstm as BL
 from repro.core.quantize import QuantSpec
 from repro.models import transformer as T
 from repro.serve.engine import Request, ServeEngine
-from repro.serve.recurrent import RNNRuntime, TransformerRuntime, drive_session
+from repro.serve.recurrent import (RNNRuntime, TransformerRuntime,
+                                   drive_session, speculative_draft)
 
 # small vocab on purpose: randomly drawn eos ids actually collide with
 # sampled streams, so eos-mid-stream and eos-on-the-admission-token paths
@@ -153,3 +162,84 @@ def test_engine_fuzz_parity(family, seed):
 
     # the engine is drained: every slot is reusable
     assert not eng._live_host.any() and not eng._prefill_q
+
+
+# --- speculative decoding: same bar, plus the plain engine as a second oracle
+
+
+_DRAFTS: dict = {}
+_SPEC_ENGINES: dict = {}
+
+
+def _draft(family):
+    """Packed-ternary draft of the family's fp target, built once."""
+    if family not in _DRAFTS:
+        rt, _, _ = _runtime(family)
+        _DRAFTS[family] = speculative_draft(rt, mode="ternary")
+    return _DRAFTS[family]
+
+
+def _spec_engine(family, slots, chunk, k):
+    key = (family, slots, chunk, k)
+    if key not in _SPEC_ENGINES:
+        rt, vocab, _ = _runtime(family)
+        _SPEC_ENGINES[key] = ServeEngine(
+            rt, vocab, slots=slots, max_context=CTX, prefill_chunk=chunk,
+            draft=_draft(family), spec_k=k)
+    return _SPEC_ENGINES[key]
+
+
+def _spec_scenario(seed, vocab):
+    """Mixed-traffic scenario at temperature 0 — the byte-parity regime.
+    (At temperature > 0 speculative output matches the target in
+    DISTRIBUTION, which tests/test_spec_decode.py frequency-tests; byte
+    equality is only defined for greedy streams.)"""
+    reqs, eos, slots, chunk = _scenario(seed, vocab)
+    reqs = [dataclasses.replace(r, temperature=0.0, top_k=0) for r in reqs]
+    rng = random.Random(seed + 1)
+    return reqs, eos, slots, chunk, rng.choice([2, 3])
+
+
+SPEC_FAMILY_SEEDS = (
+    [("lstm-fp", s) for s in range(400, 405)]       # 5 scenarios
+    + [("qwen3", s) for s in range(500, 503)]       # 3 scenarios
+)                                                   # = 8 total
+
+
+@pytest.mark.parametrize("family,seed", SPEC_FAMILY_SEEDS,
+                         ids=[f"spec-{f}-{s}" for f, s in SPEC_FAMILY_SEEDS])
+def test_engine_spec_fuzz_parity(family, seed):
+    rt, vocab, ctx = _runtime(family)
+    reqs, eos, slots, chunk, k = _spec_scenario(seed, vocab)
+    plain = _engine(family, slots, chunk)
+    spec = _spec_engine(family, slots, chunk, k)
+    plain.eos_id = spec.eos_id = eos
+
+    p_comps, pm = plain.run([dataclasses.replace(r) for r in reqs],
+                            realtime=False)
+    s_comps, sm = spec.run([dataclasses.replace(r) for r in reqs],
+                           realtime=False)
+
+    # compile-once invariants, lifelong, for BOTH engines
+    assert pm["tick_traces"] == 1
+    assert sm["spec_traces"] == 1
+    assert sm["max_decode_stall_ticks"] <= 1
+    assert 0.0 <= sm["accept_rate"] <= 1.0
+
+    p_by = {c.rid: c.tokens for c in p_comps}
+    s_by = {c.rid: c for c in s_comps}
+    assert sorted(s_by) == sorted(p_by)
+    for r in reqs:
+        c = s_by[r.rid]
+        # byte parity against the plain engine AND the sequential oracle
+        assert c.tokens == p_by[r.rid], \
+            f"spec diverged from plain engine for rid={r.rid} (seed={seed})"
+        assert c.tokens == _expected(rt, vocab, ctx, r, eos), \
+            f"spec diverged from oracle for rid={r.rid} (seed={seed})"
+        if eos is not None and c.tokens[-1] == eos:
+            assert c.finished == "eos"
+        else:
+            assert len(c.tokens) == r.max_tokens
+        assert c.t_admit <= c.t_first <= c.t_done
+
+    assert not spec._live_host.any() and not spec._prefill_q
