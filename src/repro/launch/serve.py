@@ -30,6 +30,12 @@ verifies them in one multi-token step, and rejection sampling keeps the
 output distribution exactly the target's (byte-identical at temperature
 0).  The report adds the measured acceptance rate and the drafted-token
 throughput next to the emitted tok/s.
+
+--listen swaps the synthetic workload for the HTTP/SSE front door
+(serve/frontdoor.py): the same warmed engine behind POST /v1/generate and
+GET /v1/stats, with client disconnects cancelling mid-flight and (where the
+runtime supports it) a prefix-state cache sized by --prefix-cache-mb
+serving repeated system prompts from one spliced row copy.
 """
 from __future__ import annotations
 
@@ -166,6 +172,52 @@ def run_traffic(cfg, rt, args, draft=None) -> dict:
     return m
 
 
+def run_listen(cfg, rt, args, draft=None) -> None:
+    """Serve over HTTP/SSE: build the engine the way --traffic does (same
+    warm, same invariants), hand it to the asyncio front door, block."""
+    import asyncio
+
+    from repro.serve.frontdoor import FrontDoor
+    from repro.serve.prefixcache import PrefixCache
+
+    ctx = args.prompt_len + args.gen
+    cache = None
+    if args.prefix_cache_mb > 0:
+        supported = (getattr(rt, "chunk_granularity", "whole") == "token"
+                     and (rt.family == "rnn"
+                          or getattr(rt, "pad_buckets", False)))
+        if supported:
+            cache = PrefixCache(args.prefix_cache_mb << 20)
+        else:
+            print("prefix cache: unsupported for this runtime "
+                  "(needs token-granularity chunking; non-ring caches) "
+                  "— serving without it")
+    eng = ServeEngine(rt, cfg.vocab, slots=args.slots, max_context=ctx,
+                      prefill_chunk=args.prefill_chunk,
+                      draft=draft, spec_k=args.spec_k if draft else 0,
+                      prefix_cache=cache)
+    eng.warm([args.prompt_len])
+
+    async def _serve():
+        fd = FrontDoor(eng, host=args.host, port=args.port)
+        await fd.start()
+        print(f"front door listening on http://{fd.host}:{fd.port}  "
+              f"({args.slots} slots, ctx {ctx}, chunk {args.prefill_chunk}"
+              + (f", prefix cache {args.prefix_cache_mb} MB" if cache
+                 else "") + ")")
+        print(f"  curl -N -X POST http://{fd.host}:{fd.port}/v1/generate "
+              "-d '{\"prompt\": [1,2,3], \"max_tokens\": 16}'")
+        try:
+            await fd.serve_forever()
+        finally:
+            await fd.close()
+
+    try:
+        asyncio.run(_serve())
+    except KeyboardInterrupt:
+        pass
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS + RNN_ARCH_IDS,
@@ -197,11 +249,21 @@ def main(argv=None):
                     help="speculative decoding: the packed --quant export "
                          "of the model drafts K tokens per round for the "
                          "fp target to verify (--traffic only; 0 = off)")
+    ap.add_argument("--listen", action="store_true",
+                    help="serve the engine over HTTP/SSE "
+                         "(serve/frontdoor.py) instead of replaying a "
+                         "synthetic workload")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8700)
+    ap.add_argument("--prefix-cache-mb", type=int, default=64,
+                    help="prefix-state cache byte budget for --listen "
+                         "(0 = off); repeated system prompts resume from "
+                         "a spliced state row instead of re-prefilling")
     args = ap.parse_args(argv)
 
-    if args.spec_k and not args.traffic:
+    if args.spec_k and not (args.traffic or args.listen):
         raise SystemExit("--spec-k is a continuous-batching engine mode; "
-                         "run it with --traffic")
+                         "run it with --traffic or --listen")
     key = jax.random.PRNGKey(args.seed)
     build = _build_rnn if args.arch in RNN_ARCH_IDS else _build_transformer
     draft = None
@@ -216,6 +278,8 @@ def main(argv=None):
     else:
         cfg, rt = build(args, key)
 
+    if args.listen:
+        return run_listen(cfg, rt, args, draft=draft)
     if args.traffic:
         return run_traffic(cfg, rt, args, draft=draft)
 

@@ -1,4 +1,4 @@
-"""Continuous-batching serve engine (DESIGN.md §7-§8).
+"""Continuous-batching serve engine (DESIGN.md §7-§10).
 
 `ServeEngine` owns a fixed pool of B slots over any serving runtime
 (BN-LSTM/GRU, RWKV6, Mamba2-hybrid, attention archs) and turns the lockstep
@@ -26,6 +26,23 @@ prefill→decode loop into mixed-length traffic serving:
     (recurrent leaves and positions to zero, attention KV masked in place)
     because the next occupant's prefill RESUMES from the slot row.
 
+The scheduler is driven through a RESUMABLE step API (DESIGN.md §10):
+`submit()` enqueues a request (priority/SLO-ordered admission), `step()`
+runs ONE scheduler iteration and returns the tokens it sampled plus any
+completions, and `cancel(rid)` retires an in-flight request mid-stream —
+mid-prefill or mid-decode — through the same batched scrub retirement
+uses, so a hung-up client leaks nothing into the slot's next occupant.
+`run()` is a thin loop over submit/step (byte-identical to the pre-step-API
+batch driver); the asyncio front door (serve/frontdoor.py) drives step()
+from an event loop while requests arrive and die asynchronously.
+
+With a `PrefixCache` (serve/prefixcache.py) attached, admission splices the
+longest cached prompt prefix straight into the slot instead of re-prefilling
+it — for the RNN family that is ONE (L, H) row-pair copy, the O(1)-state
+advantage the paper's hardware pitch implies — and every full prefill chunk
+that lands offers the carried slot state back to the cache at its
+chunk-boundary offset.
+
 Sampling is per-slot vectorized (serve/sampler.sample_slots): each slot
 carries its own temperature / top-k / PRNG key chain, and a slot's draws are
 bit-identical to running that request alone through `drive_session` — the
@@ -40,13 +57,20 @@ distribution is exactly the target's, byte-identical to plain decoding at
 temperature 0.  Rollback of rejected suffixes reuses the slot surgery:
 per-step state SELECT for RNN families, KV suffix byte-restore + pos
 rewind for attention.
+
+Every jitted region takes the runtime's parameter tree as an ARGUMENT
+(`rt.jit_prm`) instead of closing over it: closed-over weights get
+constant-folded, which shifts logits ~1ulp against the arg-passed
+`drive_session` jits and makes logits-level comparisons unsound.  Passing
+the same pytree every call leaves the trace count at 1 (asserted lifelong).
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import time
 from collections import deque
-from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Deque, Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -61,7 +85,14 @@ Array = jax.Array
 class Request:
     """One generation request.  `arrival_s` is the submit time relative to
     engine start (0 = already queued) — the traffic replay sets it from a
-    Poisson process; latency is measured against it."""
+    Poisson process; latency is measured against it.
+
+    `priority` orders ADMISSION (lower = admitted sooner; ties fall back to
+    arrival time, then submit order).  Admission is preemption-free: a
+    running low-priority request is never evicted, a queued one is only
+    overtaken.  `slo` is a reporting label — per-class TTFT percentiles are
+    broken out in the run metrics so deadline classes can be provisioned
+    separately."""
 
     prompt: Any                  # (S,) int token ids (list / np / jnp)
     max_tokens: int
@@ -69,7 +100,9 @@ class Request:
     top_k: int = 0
     seed: int = 0
     arrival_s: float = 0.0
-    rid: Optional[int] = None    # engine numbers admissions when None (the
+    priority: int = 0
+    slo: str = "default"
+    rid: Optional[int] = None    # engine numbers submissions when None (the
                                  # Request object itself is never mutated)
 
 
@@ -78,13 +111,15 @@ class Completion:
     rid: int
     tokens: List[int]            # sampled ids, EOS included when hit
     prompt_len: int
-    finished: str                # 'length' | 'eos'
+    finished: str                # 'length' | 'eos' | 'cancelled'
     slot: int
     t_submit: float              # engine-relative seconds
     t_admit: float               # slot allocated; prefill starts after this
     t_first: float               # the FIRST token was actually sampled (the
                                  # prompt's last chunk landed) — real TTFT
     t_done: float
+    cached_tokens: int = 0       # prompt tokens a prefix-cache splice skipped
+    slo: str = "default"
 
     @property
     def latency_s(self) -> float:
@@ -108,6 +143,9 @@ class _Active:
     t_admit: float
     t_first: Optional[float]            # stamped when the first token samples
     chunks: Deque[Tuple[np.ndarray, int]]  # remaining (padded chunk, n real)
+    prompt: np.ndarray  # the full prompt ids (prefix-cache keys slice it)
+    off: int            # real prompt tokens consumed so far (incl. spliced)
+    cached: int         # tokens a prefix-cache splice made unnecessary
 
 
 # ---------------------------------------------------------------------------
@@ -156,7 +194,7 @@ def tree_reset_slots(pool, ref, mask):
     slot axis; AttnCache nodes keep their KV bytes and reset only pos
     (stale entries read as unwritten — mask-don't-reshape).  A freed slot
     must read exactly like a fresh one: the next occupant's chunked prefill
-    RESUMES from the slot row instead of splicing in a fresh state."""
+    RESUMES from the slot row."""
     from repro.serve.kvcache import (AttnCache, _slot_axis, cache_reset_slots)
 
     is_cache = lambda x: isinstance(x, AttnCache)
@@ -194,31 +232,43 @@ class ServeEngine:
     eng = ServeEngine(rt, vocab, slots=8, max_context=512, prefill_chunk=32)
     completions, metrics = eng.run(requests)
 
+    or, resumably (the front door's driving mode):
+
+    rid = eng.submit(Request(...))
+    while eng.has_work():
+        token_events, completions = eng.step()   # [(rid, [ids])], [Completion]
+    eng.cancel(rid)                              # any time, any phase
+
     Speculative mode (DESIGN.md §9) pairs the target with a packed draft:
 
     eng = ServeEngine(rt, vocab, slots=8, max_context=512,
                       draft=speculative_draft(rt), spec_k=4)
 
-    Invariants (DESIGN.md §7-§9):
+    Invariants (DESIGN.md §7-§10):
       * mask-don't-reshape — the pool state, the token/key/temperature
         arrays and therefore the jitted tick keep shape (B, ...) forever;
         occupancy lives in a boolean mask;
       * one trace — `tick_traces` counts jit traces of the decode tick and
-        stays at 1 across arbitrary admit/retire interleavings (in spec
-        mode `spec_traces` counts the draft-verify-accept round the same
-        way); `prefill_traces` counts chunk-prefill traces and is bounded
-        by the declared bucket set (warm() compiles them all up front);
+        stays at 1 across arbitrary submit/cancel/admit/retire
+        interleavings (in spec mode `spec_traces` counts the
+        draft-verify-accept round the same way); `prefill_traces` counts
+        chunk-prefill traces and is bounded by the declared bucket set
+        (warm() compiles them all up front); `splice_traces` counts the
+        prefix-cache row-copy and stays at 1 (splices run at full pool-row
+        shape);
       * no head-of-line blocking — at most ONE prefill chunk runs between
         decode ticks, so an admission never stalls live decodes for more
         than one chunk of work (`max_decode_stall_ticks` <= 1);
       * per-request determinism — a request's token stream depends only on
         (prompt, seed, sampling params), never on which slot it landed in,
-        what shared the batch, or how its prompt was chunked.
+        what shared the batch, how its prompt was chunked, whether a
+        prefix-cache splice skipped part of it, or which neighbours were
+        cancelled mid-flight.
     """
 
     def __init__(self, rt, vocab: int, *, slots: int, max_context: int,
                  eos_id: Optional[int] = None, prefill_chunk: int = 32,
-                 draft=None, spec_k: int = 0):
+                 draft=None, spec_k: int = 0, prefix_cache=None):
         if slots < 1:
             raise ValueError("need at least one slot")
         if prefill_chunk < 1:
@@ -266,12 +316,30 @@ class ServeEngine:
         self._granularity = getattr(rt, "chunk_granularity", "whole")
         self._pad = bool(getattr(rt, "pad_buckets", False))
 
+        # prefix-state caching (DESIGN.md §10): boundaries are exact
+        # carried-state offsets only under token-granularity chunking, and
+        # the narrowed attention snapshot assumes non-ring caches (a ring's
+        # live window need not start at column 0)
+        self.prefix_cache = prefix_cache
+        if prefix_cache is not None:
+            if not (self._granularity == "token"
+                    and (getattr(rt, "family", None) == "rnn" or self._pad)):
+                raise NotImplementedError(
+                    "prefix-state caching needs token-granularity chunked "
+                    "prefill and (for attention archs) non-ring caches — "
+                    "the §8 bit-exact chunk-boundary contract is what makes "
+                    "a spliced prefix byte-identical to re-prefilling it")
+            prefix_cache.bind(self.prefill_chunk)
+
         self.pool = rt.init_state(self.n_slots, self.max_context,
                                   per_slot=True)
         # batch-1 template: fixes the slot axis of every pool leaf for the
         # gather/reset surgery (shapes only — no arrays are materialized)
         self._ref = jax.eval_shape(
             lambda: rt.init_state(1, self.max_context, per_slot=True))
+        # the parameter trees every jitted region takes as ARGUMENTS (see
+        # module docstring: closing over them constant-folds the weights)
+        self._prm = rt.jit_prm
         # speculative mode (DESIGN.md §9): the packed draft runs its OWN
         # slot pool in lockstep with the target's — admission prefills
         # both, retirement scrubs both, and the spec tick rolls both back
@@ -285,6 +353,7 @@ class ServeEngine:
                                                per_slot=True)
             self._dref = jax.eval_shape(
                 lambda: draft.init_state(1, self.max_context, per_slot=True))
+            self._dprm = draft.jit_prm
         B = self.n_slots
         self._pending = jnp.zeros((B,), jnp.int32)   # next token to feed
         self._live = jnp.zeros((B,), bool)
@@ -295,18 +364,34 @@ class ServeEngine:
         self._active: List[Optional[_Active]] = [None] * B
         self._prefill_q: Deque[int] = deque()   # slots mid-prefill, FIFO
         self._rid = 0
+        # the admission queue: a priority heap of submitted-but-unadmitted
+        # requests ordered (priority, arrival_s, submit seq).  Cancellation
+        # of a queued request is lazy: the rid goes into `_cancel_pending`
+        # and the entry is dropped when it reaches the heap top.
+        self._heap: List[Tuple[int, float, int, int, Request]] = []
+        self._seq = 0
+        self._queued_rids: Set[int] = set()
+        self._cancel_pending: Set[int] = set()
+        self._t0 = time.perf_counter()
 
         self.ticks = 0
         self.tick_traces = 0      # python counters bumped at TRACE time only
         self.prefill_traces = 0
         self.spec_traces = 0
+        self.splice_traces = 0
         self._occupancy_sum = 0.0
+        self._gen_tokens = 0      # cumulative over the engine's life
         self._drafted = 0         # speculative accounting: proposed drafts
         self._accepted = 0        # ... and how many of them survived verify
+        # decode-stall accounting: chunks an admission ran since the last
+        # decode tick while live decodes were waiting.  The scheduler's
+        # contract is that this never exceeds ONE chunk per admission.
+        self._stall_pending: Dict[int, int] = {}
+        self._stall_max = 0
 
-        def tick(pool, pending, live, keys, temp, topk):
+        def tick(prm, pool, pending, live, keys, temp, topk):
             self.tick_traces += 1
-            logits, pool = rt.decode_fn(pending, pool, live)
+            logits, pool = rt.decode_fn(pending, pool, live, prm=prm)
             ks = jax.vmap(jax.random.split)(keys)    # (B, 2, 2)
             nxt = sample_slots(logits, ks[:, 1], temperature=temp,
                                top_k=topk, vocab=self.vocab)
@@ -319,9 +404,10 @@ class ServeEngine:
         # the pool is dead the moment the tick/prefill/reset returns its
         # successor, so donate it (and the pending/key chains) — without
         # donation every tick would COPY all B KV caches.  CPU ignores
-        # donation with a warning, so only ask off-CPU.
+        # donation with a warning, so only ask off-CPU.  The prm tree is
+        # NEVER donated: the same arrays are passed every call.
         cpu = jax.default_backend() == "cpu"
-        self._tick = jax.jit(tick, donate_argnums=() if cpu else (0, 1, 3))
+        self._tick = jax.jit(tick, donate_argnums=() if cpu else (1, 2, 4))
 
         def admit_commit(logits, key, t, k, pending, keys, temp, topk, live,
                          slot):
@@ -341,17 +427,17 @@ class ServeEngine:
 
         write = rt.write_slots if hasattr(rt, "write_slots") else tree_write_slot
 
-        def prefill_slot(pool, tokens, n, slot):
+        def prefill_slot(prm, pool, tokens, n, slot):
             # in-slot chunked prefill: the slot row IS the session state.
             # Retraces once per bucket length (tokens' static shape); slot
             # and n are traced, so one trace serves every admission.
             self.prefill_traces += 1
             sub = tree_gather_slot(pool, self._ref, slot)
-            logits, sub = rt.prefill_chunk(tokens, sub, n)
+            logits, sub = rt.prefill_chunk(tokens, sub, n, prm=prm)
             return logits, write(pool, sub, slot)
 
         self._prefill_slot = jax.jit(
-            prefill_slot, donate_argnums=() if cpu else (0,))
+            prefill_slot, donate_argnums=() if cpu else (1,))
         # retire-time slot scrub, shape-aware: recurrent leaves + positions
         # to zero, attention KV masked in place, the device live bit
         # cleared — the freed row must read as fresh because the next
@@ -362,13 +448,29 @@ class ServeEngine:
                 jnp.where(mask, False, live)),
             donate_argnums=() if cpu else (0,))
 
+        if self.prefix_cache is not None:
+            # prefix-cache device paths.  The splice is the SAME full-row
+            # write admission prefill uses (entries are widened to the pool
+            # row shape outside jit), so it traces exactly once; the gather
+            # reads the slot row for snapshotting without donating the pool.
+            self._gather = jax.jit(
+                lambda pool, slot: tree_gather_slot(pool, self._ref, slot))
+
+            def splice(pool, sub, slot):
+                self.splice_traces += 1
+                return write(pool, sub, slot)
+
+            self._splice = jax.jit(
+                splice, donate_argnums=() if cpu else (0,))
+
         if not self.spec:
             return
 
         # -- speculative mode: draft k, verify k+1, accept, commit ----------
         K = self.spec_k
 
-        def spec_tick(pool, dpool, pending, live, keys, temp, topk):
+        def spec_tick(prm, dprm, pool, dpool, pending, live, keys, temp,
+                      topk):
             """One draft-verify-accept round over ALL live slots, jitted as
             a unit (traces exactly once — asserted like the plain tick):
 
@@ -405,7 +507,7 @@ class ServeEngine:
 
             def dbody(carry, step_keys):
                 dst, tok = carry
-                lg, dst = draft.decode_fn(tok, dst, live)
+                lg, dst = draft.decode_fn(tok, dst, live, prm=dprm)
                 nxt = sample_slots(lg, step_keys, temperature=temp,
                                    top_k=topk, vocab=self.vocab)
                 nxt = jnp.where(live, nxt, tok)
@@ -418,7 +520,8 @@ class ServeEngine:
 
             vtokens = jnp.concatenate([pending[:, None], drafts], axis=1)
             vsnap = rt.spec_snapshot(pool, K + 1)
-            p_logits, vafter, vemits = rt.verify(vtokens, pool, live)
+            p_logits, vafter, vemits = rt.verify(vtokens, pool, live,
+                                                 prm=prm)
 
             n_acc, out = spec_accept(p_logits, q_logits, drafts, akeys,
                                      temperature=temp, top_k=topk,
@@ -436,32 +539,47 @@ class ServeEngine:
             return pool, dpool, pending, new_keys, packed
 
         self._spec_tick = jax.jit(
-            spec_tick, donate_argnums=() if cpu else (0, 1, 2, 4))
+            spec_tick, donate_argnums=() if cpu else (2, 3, 4, 6))
 
         dwrite = (draft.write_slots if hasattr(draft, "write_slots")
                   else tree_write_slot)
 
-        def spec_prefill_slot(pool, dpool, tokens, n, slot):
+        def spec_prefill_slot(prm, dprm, pool, dpool, tokens, n, slot):
             # same in-slot chunk as the plain path, run against BOTH pools
             # in one jitted region — the draft must carry the same prompt
             # state as the target or its proposals start from nowhere.
             # Trace-bounded by the same bucket set (one counter).
             self.prefill_traces += 1
             sub = tree_gather_slot(pool, self._ref, slot)
-            logits, sub = rt.prefill_chunk(tokens, sub, n)
+            logits, sub = rt.prefill_chunk(tokens, sub, n, prm=prm)
             dsub = tree_gather_slot(dpool, self._dref, slot)
-            _, dsub = draft.prefill_chunk(tokens, dsub, n)
+            _, dsub = draft.prefill_chunk(tokens, dsub, n, prm=dprm)
             return (logits, write(pool, sub, slot),
                     dwrite(dpool, dsub, slot))
 
         self._spec_prefill_slot = jax.jit(
-            spec_prefill_slot, donate_argnums=() if cpu else (0, 1))
+            spec_prefill_slot, donate_argnums=() if cpu else (2, 3))
         self._spec_reset = jax.jit(
             lambda pool, dpool, live, mask: (
                 tree_reset_slots(pool, self._ref, mask),
                 tree_reset_slots(dpool, self._dref, mask),
                 jnp.where(mask, False, live)),
             donate_argnums=() if cpu else (0, 1))
+
+        if self.prefix_cache is not None:
+            self._dgather = jax.jit(
+                lambda pool, slot: tree_gather_slot(pool, self._dref, slot))
+
+            def dsplice(dpool, dsub, slot):
+                return dwrite(dpool, dsub, slot)
+
+            self._dsplice = jax.jit(
+                dsplice, donate_argnums=() if cpu else (0,))
+
+    # -- clock --------------------------------------------------------------
+
+    def _now(self) -> float:
+        return time.perf_counter() - self._t0
 
     # -- admission ----------------------------------------------------------
 
@@ -524,14 +642,17 @@ class ServeEngine:
         for Lb in self.declared_buckets(prompt_lens):
             if self.spec:
                 _, self.pool, self.draft_pool = self._spec_prefill_slot(
-                    self.pool, self.draft_pool, jnp.zeros((1, Lb), jnp.int32),
-                    jnp.int32(Lb), jnp.int32(0))
+                    self._prm, self._dprm, self.pool, self.draft_pool,
+                    jnp.zeros((1, Lb), jnp.int32), jnp.int32(Lb),
+                    jnp.int32(0))
             else:
                 _, self.pool = self._prefill_slot(
-                    self.pool, jnp.zeros((1, Lb), jnp.int32),
+                    self._prm, self.pool, jnp.zeros((1, Lb), jnp.int32),
                     jnp.int32(Lb), jnp.int32(0))
         # the warm prefills ran junk through slot 0 — scrub it so the pool
-        # is indistinguishable from fresh before any real admission
+        # is indistinguishable from fresh before any real admission.  (They
+        # ran OUTSIDE _prefill_step, so no junk prefix was offered to the
+        # prefix cache either.)
         mask = np.zeros(self.n_slots, bool)
         mask[0] = True
         self._scrub(mask)
@@ -549,27 +670,242 @@ class ServeEngine:
         idle = np.flatnonzero(np.array([a is None for a in self._active]))
         return int(idle[0]) if idle.size else None
 
-    def _admit(self, req: Request, slot: int, now: float) -> None:
-        """Pure bookkeeping: number the admission, split the prompt into
-        bucket-padded chunks, queue the slot for in-slot prefill.  No
-        device work happens here — that is the whole point (chunks run one
-        per scheduler iteration, interleaved with the decode tick)."""
-        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+    # -- the resumable scheduling API (DESIGN.md §10) -----------------------
+
+    def submit(self, req: Request) -> int:
+        """Enqueue one request for admission.  Returns its rid — the handle
+        `cancel` and the step events refer to.  Safe to call between any
+        two `step()` calls; the request is admitted (in priority order) as
+        soon as a slot frees."""
+        self._validate(req)
         rid = self._rid if req.rid is None else req.rid
         self._rid = max(self._rid, rid) + 1
+        heapq.heappush(self._heap,
+                       (req.priority, req.arrival_s, self._seq, rid, req))
+        self._seq += 1
+        self._queued_rids.add(rid)
+        return rid
+
+    def cancel(self, rid: int) -> Optional[Completion]:
+        """Retire request `rid` wherever it is: queued (dropped before it
+        ever touches a slot), mid-prefill, or mid-decode.  In-flight
+        cancellation goes through the SAME batched shape-aware scrub as
+        normal retirement — the freed slot reads exactly like a fresh one,
+        so a hung-up client cannot leak state into the next occupant (and
+        no new jit traces occur: the scrub is already compiled).
+
+        Returns a Completion with finished='cancelled' carrying the tokens
+        streamed so far, or None if the rid is unknown / already done."""
+        for slot, act in enumerate(self._active):
+            if act is not None and act.rid == rid:
+                now = self._now()
+                if slot in self._prefill_q:
+                    self._prefill_q.remove(slot)
+                    self._stall_pending.pop(rid, None)
+                comp = self._completion(act, slot, now, finished="cancelled")
+                self._retire(slot)
+                mask = np.zeros(self.n_slots, bool)
+                mask[slot] = True
+                self._scrub(mask)
+                return comp
+        if rid in self._queued_rids:
+            # lazy heap deletion: the entry is skipped when it surfaces
+            self._queued_rids.discard(rid)
+            self._cancel_pending.add(rid)
+            req = next(r for (_, _, _, hr, r) in self._heap if hr == rid)
+            now = self._now()
+            return Completion(
+                rid=rid, tokens=[],
+                prompt_len=int(np.asarray(req.prompt).size),
+                finished="cancelled", slot=-1, t_submit=req.arrival_s,
+                t_admit=now, t_first=now, t_done=now, slo=req.slo)
+        return None
+
+    def has_work(self) -> bool:
+        """True while a `step()` could make progress: queued, prefilling or
+        decoding requests exist."""
+        return bool(self._heap or self._prefill_q or self._live_host.any())
+
+    def step(self) -> Tuple[List[Tuple[int, List[int]]], List[Completion]]:
+        """ONE scheduler iteration: admit queued requests into free slots
+        (priority order), run at most one prefill chunk, run one batched
+        decode tick (or draft-verify-accept round), retire and scrub.
+
+        Returns (token_events, completions): token_events is a list of
+        (rid, [token ids sampled this iteration]) in stream order — one id
+        per live slot per plain tick, up to spec_k+1 per spec round, the
+        first token when a prompt's last chunk lands; completions are the
+        requests that finished this iteration.  `run()` is a loop over
+        this; the front door calls it from an event loop, interleaving
+        `submit`/`cancel` between iterations."""
+        now = self._now()
+        while self._heap:
+            slot = self._free_slot()
+            if slot is None:
+                break
+            _, _, _, rid, req = heapq.heappop(self._heap)
+            if rid in self._cancel_pending:
+                self._cancel_pending.discard(rid)
+                continue
+            self._queued_rids.discard(rid)
+            self._admit(req, rid, slot, self._now())
+
+        retired = np.zeros(self.n_slots, bool)
+        events: List[Tuple[int, List[int]]] = []
+        comps: List[Completion] = []
+
+        # at most ONE prefill chunk per iteration, before the tick
+        if self._prefill_q:
+            act0 = self._active[self._prefill_q[0]]
+            if self._live_host.any():
+                self._stall_pending[act0.rid] = \
+                    self._stall_pending.get(act0.rid, 0) + 1
+            sampled, comp, slot = self._prefill_step()
+            if sampled:
+                self._gen_tokens += sampled
+                events.append((act0.rid, [act0.tokens[-1]]))
+            if comp is not None:
+                comps.append(comp)
+                retired[slot] = True
+
+        if not self._live_host.any():
+            if retired.any():
+                self._scrub(retired)
+            return events, comps
+
+        if self.spec:
+            (self.pool, self.draft_pool, self._pending, self._keys,
+             spec_out) = self._spec_tick(
+                self._prm, self._dprm, self.pool, self.draft_pool,
+                self._pending, self._live, self._keys, self._temp,
+                self._topk)
+        else:
+            self.pool, self._pending, self._keys = self._tick(
+                self._prm, self.pool, self._pending, self._live, self._keys,
+                self._temp, self._topk)
+        self.ticks += 1
+        if self._stall_pending:
+            self._stall_max = max(self._stall_max,
+                                  max(self._stall_pending.values()))
+            self._stall_pending.clear()
+        n_live = int(self._live_host.sum())
+        # a prefilling slot is BUSY (it cannot be admitted into), so
+        # occupancy counts it — same "slot is taken" meaning as before
+        # chunked prefill, when admission held the slot synchronously
+        self._occupancy_sum += (n_live + len(self._prefill_q)) / self.n_slots
+
+        # one small device->host transfer per tick: the scheduler needs
+        # the sampled ids to detect EOS / quota and to free slots
+        now = self._now()
+        if self.spec:
+            # a spec round emits a VARIABLE number of tokens per slot
+            # (accepted prefix + one); truncate at EOS / quota — the
+            # overshoot the verify consumed dies with the slot scrub
+            out_host = np.asarray(spec_out)
+            for slot in np.flatnonzero(self._live_host):
+                act = self._active[slot]
+                take = int(out_host[slot, -1])
+                self._drafted += self.spec_k
+                self._accepted += max(take - 1, 0)
+                emitted: List[int] = []
+                done = False
+                for j in range(take):
+                    tok = int(out_host[slot, j])
+                    act.tokens.append(tok)
+                    emitted.append(tok)
+                    self._gen_tokens += 1
+                    hit_eos = (self.eos_id is not None
+                               and act.tokens[-1] == self.eos_id)
+                    if hit_eos or len(act.tokens) >= act.req.max_tokens:
+                        done = True
+                        break
+                events.append((act.rid, emitted))
+                if done:
+                    comps.append(self._completion(act, int(slot), now))
+                    self._retire(int(slot))
+                    retired[slot] = True
+        else:
+            self._gen_tokens += n_live
+            toks = np.asarray(self._pending)
+            for slot in np.flatnonzero(self._live_host):
+                act = self._active[slot]
+                act.tokens.append(int(toks[slot]))
+                events.append((act.rid, [int(toks[slot])]))
+                hit_eos = (self.eos_id is not None
+                           and act.tokens[-1] == self.eos_id)
+                if hit_eos or len(act.tokens) >= act.req.max_tokens:
+                    comps.append(self._completion(act, int(slot), now))
+                    self._retire(int(slot))
+                    retired[slot] = True
+        if retired.any():
+            # scrub the freed slots in ONE batched shape-aware reset:
+            # the next occupant prefills IN the slot, so it must read
+            # exactly like a fresh one
+            self._scrub(retired)
+        return events, comps
+
+    # -- internals ----------------------------------------------------------
+
+    def _admit(self, req: Request, rid: int, slot: int, now: float) -> None:
+        """Pure bookkeeping plus (with a prefix cache) at most one splice:
+        look up the longest cached prompt prefix, copy its carried state
+        into the slot row, split the REMAINING prompt into bucket-padded
+        chunks and queue the slot for in-slot prefill.  The cached prefix
+        is capped at size-1: the last chunk must still run because it
+        samples the request's first token."""
+        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        cached = 0
+        if self.prefix_cache is not None:
+            cached, entry = self.prefix_cache.lookup(prompt)
+            if entry is not None and self.spec and entry.draft_state is None:
+                cached, entry = 0, None  # stored by a non-spec engine: no
+            if entry is not None:        # draft half to keep in lockstep
+                self._splice_entry(entry, slot)
         chunks: Deque[Tuple[np.ndarray, int]] = deque()
-        off = 0
-        for Lb, n in self._chunk_plan(prompt.size):
+        off = cached
+        for Lb, n in self._chunk_plan(prompt.size - cached):
             c = np.zeros(Lb, np.int32)
             c[:n] = prompt[off:off + n]
             off += n
             chunks.append((c, n))
         self._active[slot] = _Active(
             req=req, rid=rid, tokens=[], t_submit=req.arrival_s,
-            t_admit=now, t_first=None, chunks=chunks)
+            t_admit=now, t_first=None, chunks=chunks, prompt=prompt,
+            off=cached, cached=cached)
         self._prefill_q.append(slot)
 
-    def _prefill_step(self, t0: float):
+    def _splice_entry(self, entry, slot: int) -> None:
+        """Copy a cached prefix state into the slot row: widen narrowed
+        attention leaves back to pool capacity (zero tail — masked exactly
+        like the stale bytes retirement leaves), then ONE full-row write —
+        for the RNN family that is the two (L, H) row copies
+        `rnn_write_slots` was built from."""
+        from repro.serve.prefixcache import widen_state
+
+        sub = widen_state(entry.state, self._ref)
+        self.pool = self._splice(self.pool, sub, jnp.int32(slot))
+        if self.spec:
+            dsub = widen_state(entry.draft_state, self._dref)
+            self.draft_pool = self._dsplice(self.draft_pool, dsub,
+                                            jnp.int32(slot))
+
+    def _offer_snapshot(self, slot: int, act: _Active) -> None:
+        """Offer the slot's carried state to the prefix cache at the
+        chunk-boundary offset it just reached (skipped when the boundary is
+        already cached — the digest check costs nothing device-side)."""
+        from repro.serve.prefixcache import narrow_state
+
+        prefix = act.prompt[:act.off]
+        if self.prefix_cache.contains(prefix):
+            return
+        sub = narrow_state(self._gather(self.pool, jnp.int32(slot)), act.off)
+        dsub = None
+        if self.spec:
+            dsub = narrow_state(
+                self._dgather(self.draft_pool, jnp.int32(slot)), act.off)
+        self.prefix_cache.insert(prefix, sub, dsub)
+
+    def _prefill_step(self):
         """Run ONE chunk of the oldest prefilling slot.  When the last
         chunk lands, sample the request's first token (stamping the real
         `t_first`) and either turn the slot live or — max_tokens == 1 /
@@ -580,12 +916,16 @@ class ServeEngine:
         chunk, n = act.chunks.popleft()
         if self.spec:
             logits, self.pool, self.draft_pool = self._spec_prefill_slot(
-                self.pool, self.draft_pool, jnp.asarray(chunk)[None],
-                jnp.int32(n), jnp.int32(slot))
+                self._prm, self._dprm, self.pool, self.draft_pool,
+                jnp.asarray(chunk)[None], jnp.int32(n), jnp.int32(slot))
         else:
             logits, self.pool = self._prefill_slot(
-                self.pool, jnp.asarray(chunk)[None], jnp.int32(n),
+                self._prm, self.pool, jnp.asarray(chunk)[None], jnp.int32(n),
                 jnp.int32(slot))
+        act.off += n
+        if (self.prefix_cache is not None and n == self.prefill_chunk
+                and act.off % self.prefill_chunk == 0):
+            self._offer_snapshot(slot, act)
         if act.chunks:
             return 0, None, None
         self._prefill_q.popleft()
@@ -597,7 +937,7 @@ class ServeEngine:
             self._pending, self._keys, self._temp, self._topk, self._live,
             jnp.int32(slot))
         act.tokens.append(int(tok0))
-        act.t_first = time.perf_counter() - t0
+        act.t_first = self._now()
         if (req.max_tokens <= 1
                 or (self.eos_id is not None and act.tokens[0] == self.eos_id)):
             # completed at admission: the device-side live bit was set by
@@ -610,16 +950,19 @@ class ServeEngine:
         self._live_host[slot] = True
         return 1, None, None
 
-    def _completion(self, act: _Active, slot: int, now: float) -> Completion:
-        hit_eos = (self.eos_id is not None and act.tokens
-                   and act.tokens[-1] == self.eos_id)
+    def _completion(self, act: _Active, slot: int, now: float,
+                    finished: Optional[str] = None) -> Completion:
+        if finished is None:
+            hit_eos = (self.eos_id is not None and act.tokens
+                       and act.tokens[-1] == self.eos_id)
+            finished = "eos" if hit_eos else "length"
         return Completion(
             rid=act.rid, tokens=act.tokens,
-            prompt_len=int(np.asarray(act.req.prompt).size),
-            finished="eos" if hit_eos else "length", slot=slot,
+            prompt_len=int(act.prompt.size),
+            finished=finished, slot=slot,
             t_submit=act.t_submit, t_admit=act.t_admit,
             t_first=act.t_first if act.t_first is not None else act.t_admit,
-            t_done=now)
+            t_done=now, cached_tokens=act.cached, slo=act.req.slo)
 
     def _retire(self, slot: int) -> None:
         # host bookkeeping only: the device-side live bit clears in the
@@ -638,137 +981,85 @@ class ServeEngine:
         else:
             self.pool, self._live = self._reset(self.pool, self._live, m)
 
-    # -- the run loop -------------------------------------------------------
+    # -- stats (the front door's /v1/stats) ---------------------------------
+
+    def stats(self) -> dict:
+        """Cumulative engine-lifetime counters — what a serving fleet
+        scrapes.  The trace counters ARE the compile-once invariants."""
+        d = {
+            "slots": self.n_slots,
+            "active": sum(a is not None for a in self._active),
+            "queued": len(self._queued_rids),
+            "ticks": self.ticks,
+            "gen_tokens": self._gen_tokens,
+            "tick_traces": self.tick_traces,
+            "prefill_traces": self.prefill_traces,
+            "max_decode_stall_ticks": self._stall_max,
+        }
+        if self.spec:
+            d.update({"spec_traces": self.spec_traces,
+                      "drafted_tokens": self._drafted,
+                      "accepted_drafts": self._accepted})
+        if self.prefix_cache is not None:
+            d["splice_traces"] = self.splice_traces
+            d["prefix_cache"] = self.prefix_cache.stats()
+        return d
+
+    # -- the batch driver ---------------------------------------------------
 
     def run(self, requests: Sequence[Request], *, realtime: bool = True):
         """Drive a workload to completion.  Returns (completions, metrics).
 
         `realtime=True` honours `arrival_s` against the wall clock (traffic
         replay: a request is invisible until it arrives).  `realtime=False`
-        treats arrivals as a priority order only — fastest way to drain a
-        batch, and what the deterministic parity tests use."""
+        treats arrivals as an admission-priority order only — fastest way
+        to drain a batch, and what the deterministic parity tests use.
+
+        A thin loop over `submit()` + `step()`: the batch driver and the
+        front door run the IDENTICAL scheduler, so everything the fuzz
+        harness proves about run() holds for the streaming path too."""
         for r in requests:  # fail fast, BEFORE any request is in flight:
             self._validate(r)  # a bad request must not poison the workload
-        queue = deque(sorted(requests, key=lambda r: r.arrival_s))
+        arrivals = deque(sorted(requests, key=lambda r: r.arrival_s))
         completions: List[Completion] = []
-        t0 = time.perf_counter()
-        gen_tokens = 0
+        self._t0 = time.perf_counter()
+        gen0 = self._gen_tokens
         ticks0, occ0 = self.ticks, self._occupancy_sum  # per-run deltas
         drafted0, accepted0 = self._drafted, self._accepted
-        # decode-stall accounting: chunks an admission ran since the last
-        # decode tick while live decodes were waiting.  The scheduler's
-        # contract is that this never exceeds ONE chunk per admission.
-        stall_pending: Dict[int, int] = {}
-        stall_max = 0
+        self._stall_pending.clear()
+        self._stall_max = 0
 
-        while queue or self._prefill_q or self._live_host.any():
-            now = time.perf_counter() - t0
-            # admit while there is traffic that has arrived and a free slot
-            while queue and (not realtime or queue[0].arrival_s <= now):
-                slot = self._free_slot()
-                if slot is None:
-                    break
-                req = queue.popleft()
-                self._admit(req, slot, time.perf_counter() - t0)
+        while (arrivals or self._heap or self._prefill_q
+               or self._live_host.any()):
+            now = self._now()
+            # release traffic that has arrived into the admission heap
+            while arrivals and (not realtime or arrivals[0].arrival_s <= now):
+                self.submit(arrivals.popleft())
+            _, comps = self.step()
+            completions.extend(comps)
+            if (not self._prefill_q and not self._live_host.any()
+                    and not self._heap and arrivals and realtime):
+                # idle until the next arrival
+                wait = arrivals[0].arrival_s - self._now()
+                if wait > 0:
+                    time.sleep(min(wait, 0.05))
 
-            retired = np.zeros(self.n_slots, bool)
+        if self._stall_pending:  # prefill work after the last decode tick
+            self._stall_max = max(self._stall_max,
+                                  max(self._stall_pending.values()))
+            self._stall_pending.clear()
 
-            # at most ONE prefill chunk per iteration, before the tick
-            if self._prefill_q:
-                rid = self._active[self._prefill_q[0]].rid
-                if self._live_host.any():
-                    stall_pending[rid] = stall_pending.get(rid, 0) + 1
-                sampled, comp, slot = self._prefill_step(t0)
-                gen_tokens += sampled
-                if comp is not None:
-                    completions.append(comp)
-                    retired[slot] = True
-
-            if not self._live_host.any():
-                if retired.any():
-                    self._scrub(retired)
-                if not self._prefill_q and queue and realtime:
-                    # idle until the next arrival
-                    wait = queue[0].arrival_s - (time.perf_counter() - t0)
-                    if wait > 0:
-                        time.sleep(min(wait, 0.05))
-                continue
-
-            if self.spec:
-                (self.pool, self.draft_pool, self._pending, self._keys,
-                 spec_out) = self._spec_tick(
-                    self.pool, self.draft_pool, self._pending, self._live,
-                    self._keys, self._temp, self._topk)
-            else:
-                self.pool, self._pending, self._keys = self._tick(
-                    self.pool, self._pending, self._live, self._keys,
-                    self._temp, self._topk)
-            self.ticks += 1
-            if stall_pending:
-                stall_max = max(stall_max, max(stall_pending.values()))
-                stall_pending.clear()
-            n_live = int(self._live_host.sum())
-            # a prefilling slot is BUSY (it cannot be admitted into), so
-            # occupancy counts it — same "slot is taken" meaning as before
-            # chunked prefill, when admission held the slot synchronously
-            self._occupancy_sum += (n_live + len(self._prefill_q)) / self.n_slots
-
-            # one small device->host transfer per tick: the scheduler needs
-            # the sampled ids to detect EOS / quota and to free slots
-            now = time.perf_counter() - t0
-            if self.spec:
-                # a spec round emits a VARIABLE number of tokens per slot
-                # (accepted prefix + one); truncate at EOS / quota — the
-                # overshoot the verify consumed dies with the slot scrub
-                out_host = np.asarray(spec_out)
-                for slot in np.flatnonzero(self._live_host):
-                    act = self._active[slot]
-                    take = int(out_host[slot, -1])
-                    self._drafted += self.spec_k
-                    self._accepted += max(take - 1, 0)
-                    done = False
-                    for j in range(take):
-                        act.tokens.append(int(out_host[slot, j]))
-                        gen_tokens += 1
-                        hit_eos = (self.eos_id is not None
-                                   and act.tokens[-1] == self.eos_id)
-                        if hit_eos or len(act.tokens) >= act.req.max_tokens:
-                            done = True
-                            break
-                    if done:
-                        completions.append(
-                            self._completion(act, int(slot), now))
-                        self._retire(int(slot))
-                        retired[slot] = True
-            else:
-                gen_tokens += n_live
-                toks = np.asarray(self._pending)
-                for slot in np.flatnonzero(self._live_host):
-                    act = self._active[slot]
-                    act.tokens.append(int(toks[slot]))
-                    hit_eos = (self.eos_id is not None
-                               and act.tokens[-1] == self.eos_id)
-                    if hit_eos or len(act.tokens) >= act.req.max_tokens:
-                        completions.append(
-                            self._completion(act, int(slot), now))
-                        self._retire(int(slot))
-                        retired[slot] = True
-            if retired.any():
-                # scrub the freed slots in ONE batched shape-aware reset:
-                # the next occupant prefills IN the slot, so it must read
-                # exactly like a fresh one
-                self._scrub(retired)
-
-        if stall_pending:  # prefill work after the last decode tick
-            stall_max = max(stall_max, max(stall_pending.values()))
-
-        wall = time.perf_counter() - t0
+        wall = time.perf_counter() - self._t0
+        gen_tokens = self._gen_tokens - gen0
         ticks = self.ticks - ticks0
         occ = self._occupancy_sum - occ0
         lat = sorted(c.latency_s for c in completions)
         ttft = sorted(c.ttft_s for c in completions)
         pct = lambda xs, p: (xs[min(len(xs) - 1, int(p * len(xs)))]
                              if xs else 0.0)
+        by_cls: Dict[str, List[float]] = {}
+        for c in completions:
+            by_cls.setdefault(c.slo, []).append(c.ttft_s)
         metrics = {
             "requests": len(completions),
             "wall_s": wall,
@@ -778,7 +1069,11 @@ class ServeEngine:
             "p95_latency_s": pct(lat, 0.95),
             "ttft_p50_s": pct(ttft, 0.50),
             "ttft_p95_s": pct(ttft, 0.95),
-            "max_decode_stall_ticks": stall_max,
+            "ttft_by_class": {
+                cls: {"n": len(v), "p50_s": pct(sorted(v), 0.50),
+                      "p95_s": pct(sorted(v), 0.95)}
+                for cls, v in sorted(by_cls.items())},
+            "max_decode_stall_ticks": self._stall_max,
             "ticks": ticks,
             "tick_traces": self.tick_traces,  # cumulative on purpose: the
             "prefill_traces": self.prefill_traces,  # invariants are ==1 and
@@ -798,4 +1093,7 @@ class ServeEngine:
                 # headline agg_tok_s is emitted (target-quality) tokens/s
                 "draft_tok_s": drafted / wall if wall > 0 else 0.0,
             })
+        if self.prefix_cache is not None:
+            metrics["splice_traces"] = self.splice_traces
+            metrics["prefix_cache"] = self.prefix_cache.stats()
         return completions, metrics

@@ -255,6 +255,47 @@ def cache_reset_slots(c: AttnCache, mask: Array) -> AttnCache:
 
 
 # ---------------------------------------------------------------------------
+# prefix-state snapshots (DESIGN.md §10): the front door's prefix cache holds
+# a gathered batch-1 slot state per cached prompt prefix.  For attention
+# leaves only the FIRST `p` kv columns are live (non-ring, pos == p at a
+# chunk boundary), so the stored entry narrows the cap axis to p — the cache
+# budget pays for written history, not provisioned capacity — and splice-time
+# widening zero-fills the tail, which per-slot pos masks exactly like the
+# stale bytes `cache_reset_slots` leaves behind.  Ring caches are excluded by
+# the engine's prefix-cache gate (a ring's live window need not start at 0).
+# ---------------------------------------------------------------------------
+
+
+def cache_narrow(c: AttnCache, p: int) -> AttnCache:
+    """Keep only kv columns [0, p) of a gathered batch-1 cache.  `p` is a
+    static chunk-boundary length; every row's pos must be <= p (true by
+    construction: the engine snapshots right after the chunk that brought
+    pos TO the boundary).  Works on a bare cache ((1, cap, H, hd), pos (1,))
+    and a layer-stacked leaf ((L, 1, cap, H, hd), pos (L, 1)) — the cap axis
+    is `pos.ndim` in both layouts."""
+    if c.ring:
+        raise ValueError("prefix snapshots need a non-ring cache")
+    ax = c.pos.ndim
+    sl = (slice(None),) * ax + (slice(0, p),)
+    return c._replace(k=c.k[sl], v=c.v[sl])
+
+
+def cache_widen(c: AttnCache, full_shape) -> AttnCache:
+    """Inverse of `cache_narrow` up to the masked tail: zero-fill the cap
+    axis back to the pool's provisioned capacity (`full_shape` is the
+    batch-1 reference leaf shape) so the widened cache is row-copyable into
+    a slot by the one-trace `cache_write_slot` path."""
+    ax = c.pos.ndim
+    p = c.k.shape[ax]
+    if p == full_shape[ax]:
+        return c
+    k = jnp.zeros(full_shape, c.k.dtype)
+    v = jnp.zeros(full_shape, c.v.dtype)
+    idx = (slice(None),) * ax + (slice(0, p),)
+    return c._replace(k=k.at[idx].set(c.k), v=v.at[idx].set(c.v))
+
+
+# ---------------------------------------------------------------------------
 # speculative-decoding suffix rewind (DESIGN.md §9): a verify step writes a
 # span of K+1 candidate tokens at each slot's own depth; rejection rolls the
 # suffix back.  Unlike bucket-pad rewind (pos arithmetic only), spec rollback

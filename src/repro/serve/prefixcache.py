@@ -1,0 +1,193 @@
+"""Prefix-state cache for the serving front door (DESIGN.md §10).
+
+Shared-prefix chat traffic (a system prompt repeated across requests) is the
+workload where the RNN family's O(1) carried state pays off hardest: a
+cached prefix is ONE (L, H) h/c row pair, and resuming from it is a single
+`rnn_write_slots` row copy instead of re-prefilling the whole prefix.
+Attention archs ride the same machinery with their kv columns narrowed to
+the written history (`kvcache.cache_narrow`), so a cached transformer prefix
+costs `p` columns of kv bytes, not a full provisioned row.
+
+The cache is keyed on a hash of the token-id prefix at CHUNK-BUCKET
+boundaries — exactly the offsets where the engine's chunked in-slot prefill
+holds a complete, bit-exact carried state between chunks (§8).  On
+admission the engine looks up the longest cached boundary prefix of the
+prompt (capped at size-1: the last chunk must still run, because it samples
+the request's first token), splices the entry's state into the slot, and
+prefills only the remainder; on every full chunk that lands the engine
+offers the gathered slot state back for insertion.
+
+Exactness is inherited, not re-proven: a spliced state is bit-identical to
+the state chunked prefill would have carried to that boundary (that is §8's
+whole-vs-chunked contract), so hit-resume streams are byte-identical to
+cold full prefills — asserted in tests/test_prefixcache.py.
+
+Hash collisions cannot poison a stream: every entry stores the exact token
+ids it was built from, and a lookup whose hash matches but whose ids differ
+is rejected (counted in `collisions`) — the splice never trusts the digest
+alone.  Eviction is LRU under a byte budget measured on the narrowed
+on-device entries (target + draft state for speculative engines).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.serve.kvcache import AttnCache, cache_narrow, cache_widen
+
+
+def tree_bytes(tree: Any) -> int:
+    """Bytes of every array leaf in a (possibly AttnCache-bearing) pytree."""
+    return sum(l.size * l.dtype.itemsize
+               for l in jax.tree_util.tree_leaves(tree)
+               if hasattr(l, "dtype"))
+
+
+def narrow_state(sub: Any, p: int) -> Any:
+    """Narrow a gathered batch-1 slot state for storage: AttnCache leaves
+    keep only their first `p` kv columns; O(1) recurrent leaves (h/c,
+    S-matrices, conv tails) are already minimal and pass through."""
+    is_cache = lambda x: isinstance(x, AttnCache)
+    return jax.tree.map(lambda l: cache_narrow(l, p) if is_cache(l) else l,
+                        sub, is_leaf=is_cache)
+
+
+def widen_state(sub: Any, ref: Any) -> Any:
+    """Zero-fill narrowed AttnCache leaves back to the pool's provisioned
+    capacity (`ref` is the engine's batch-1 shape template) so the splice is
+    the same one-trace full-row write admission prefill uses."""
+    is_cache = lambda x: isinstance(x, AttnCache)
+    return jax.tree.map(
+        lambda l, r: cache_widen(l, r.k.shape) if is_cache(l) else l,
+        sub, ref, is_leaf=is_cache)
+
+
+@dataclasses.dataclass
+class PrefixEntry:
+    tokens: np.ndarray          # the EXACT ids hashed — the poison guard
+    state: Any                  # narrowed batch-1 target state (on device)
+    draft_state: Optional[Any]  # lockstep draft state (speculative engines)
+    nbytes: int
+
+
+class PrefixCache:
+    """LRU map: token-prefix digest -> carried slot state at that boundary.
+
+    One cache may be shared by several engines (replicas serving the same
+    model) as long as they agree on the chunk size and state layout —
+    `bind(chunk)` pins the boundary stride on first use and refuses a
+    mismatched engine afterwards.
+    """
+
+    def __init__(self, budget_bytes: int):
+        if budget_bytes < 1:
+            raise ValueError("prefix cache needs a positive byte budget")
+        self.budget_bytes = int(budget_bytes)
+        self.chunk: Optional[int] = None
+        self._entries: "OrderedDict[str, PrefixEntry]" = OrderedDict()
+        self.bytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.hit_tokens = 0       # prefill tokens splices made unnecessary
+        self.insertions = 0
+        self.evictions = 0
+        self.collisions = 0       # digest matched, stored ids did not
+
+    def bind(self, chunk: int) -> None:
+        if self.chunk is None:
+            self.chunk = int(chunk)
+        elif self.chunk != int(chunk):
+            raise ValueError(
+                f"prefix cache is bound to chunk={self.chunk}; an engine "
+                f"with prefill_chunk={chunk} would key incompatible "
+                f"boundaries")
+
+    @staticmethod
+    def _key(tokens: np.ndarray) -> str:
+        t = np.ascontiguousarray(np.asarray(tokens, np.int32))
+        return hashlib.blake2b(t.tobytes() + t.size.to_bytes(8, "little"),
+                               digest_size=16).hexdigest()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def contains(self, tokens: np.ndarray) -> bool:
+        """Digest-presence check only (no LRU touch, no counters) — the
+        engine uses it to skip the device gather when a boundary it just
+        crossed is already cached."""
+        return self._key(tokens) in self._entries
+
+    def lookup(self, prompt: np.ndarray,
+               limit: Optional[int] = None) -> Tuple[int, Optional[PrefixEntry]]:
+        """Longest cached boundary prefix of `prompt`, searched from
+        floor(min(limit, len-1) / chunk) * chunk downward in chunk strides.
+        Returns (p, entry); (0, None) on miss.  A hit refreshes LRU order;
+        an id mismatch at a matching digest is a collision, never a hit."""
+        assert self.chunk is not None, "bind(chunk) before lookup"
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        cap = prompt.size - 1 if limit is None else min(limit, prompt.size - 1)
+        p = (cap // self.chunk) * self.chunk
+        if p < self.chunk:
+            return 0, None  # no cacheable boundary exists for this prompt
+        while p >= self.chunk:
+            key = self._key(prompt[:p])
+            e = self._entries.get(key)
+            if e is not None:
+                if not np.array_equal(e.tokens, prompt[:p]):
+                    self.collisions += 1
+                elif e.tokens.size != p:  # defensive: key encodes size too
+                    self.collisions += 1
+                else:
+                    self._entries.move_to_end(key)
+                    self.hits += 1
+                    self.hit_tokens += p
+                    return p, e
+            p -= self.chunk
+        self.misses += 1
+        return 0, None
+
+    def insert(self, tokens: np.ndarray, state: Any,
+               draft_state: Optional[Any] = None) -> bool:
+        """Store the carried state for prefix `tokens`.  Re-inserting a
+        present key refreshes its LRU position (the state at a boundary is
+        deterministic, so the stored entry is already correct).  Entries are
+        evicted oldest-first until the budget holds; an entry larger than
+        the whole budget is refused."""
+        tokens = np.asarray(tokens, np.int32).reshape(-1).copy()
+        key = self._key(tokens)
+        if key in self._entries:
+            self._entries.move_to_end(key)
+            return False
+        nbytes = tree_bytes(state) + tree_bytes(draft_state)
+        if nbytes > self.budget_bytes:
+            return False
+        while self.bytes + nbytes > self.budget_bytes and self._entries:
+            _, old = self._entries.popitem(last=False)
+            self.bytes -= old.nbytes
+            self.evictions += 1
+        self._entries[key] = PrefixEntry(tokens=tokens, state=state,
+                                         draft_state=draft_state,
+                                         nbytes=nbytes)
+        self.bytes += nbytes
+        self.insertions += 1
+        return True
+
+    def stats(self) -> dict:
+        total = self.hits + self.misses
+        return {
+            "entries": len(self._entries),
+            "bytes": self.bytes,
+            "budget_bytes": self.budget_bytes,
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": self.hits / total if total else 0.0,
+            "hit_tokens": self.hit_tokens,
+            "insertions": self.insertions,
+            "evictions": self.evictions,
+            "collisions": self.collisions,
+        }

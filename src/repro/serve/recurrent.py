@@ -98,20 +98,34 @@ class RNNRuntime:
     def decode_step(self, tok: Array, state: BL.RNNState):
         return self._decode(self.variables, self.tables, tok, state)
 
+    @property
+    def jit_prm(self):
+        """The pytree a caller jitting its own region must thread as an
+        ARGUMENT into `decode_fn`/`prefill_chunk`/`verify` (the engine's
+        tick/prefill jits do): closing over weights instead lets XLA
+        constant-fold them, which shifts logits ~1ulp vs the arg-passed
+        `drive_session` jits and makes logits-level comparisons unsound."""
+        return (self.variables, self.tables)
+
     def decode_fn(self, tok: Array, state: BL.RNNState,
-                  live: Optional[Array] = None):
+                  live: Optional[Array] = None, prm=None):
         """Unjitted decode body for callers that jit a larger region (the
         continuous-batching engine's tick).  `live` (B,) masks dead slots:
-        their h/c/pos stay bit-for-bit frozen inside the fused kernel."""
-        return BL.rnn_decode_step(self.variables, tok, self.cfg, state,
-                                  tables=self.tables, live=live,
+        their h/c/pos stay bit-for-bit frozen inside the fused kernel.
+        `prm` is the caller's traced `jit_prm` (None: close over self's —
+        only sound outside jit)."""
+        var, tb = prm if prm is not None else (self.variables, self.tables)
+        return BL.rnn_decode_step(var, tok, self.cfg, state,
+                                  tables=tb, live=live,
                                   interpret=self._interpret)
 
-    def prefill_chunk(self, tokens: Array, state: BL.RNNState, n: Array):
+    def prefill_chunk(self, tokens: Array, state: BL.RNNState, n: Array,
+                      prm=None):
         """Unjitted bucket-padded chunk body (engine jits gather+chunk+write
         as one region): consume the first `n` of tokens, carry the state."""
-        return BL.rnn_prefill_chunk(self.variables, tokens, self.cfg, state,
-                                    n=n, tables=self.tables)
+        var, tb = prm if prm is not None else (self.variables, self.tables)
+        return BL.rnn_prefill_chunk(var, tokens, self.cfg, state,
+                                    n=n, tables=tb)
 
     def write_slots(self, state: BL.RNNState, sub: BL.RNNState, slots):
         return BL.rnn_write_slots(state, sub, slots)
@@ -132,12 +146,13 @@ class RNNRuntime:
         return (state.h, state.c)
 
     def verify(self, tokens: Array, state: BL.RNNState,
-               live: Optional[Array] = None):
+               live: Optional[Array] = None, prm=None):
         """Multi-token target step (unjitted body — the engine jits the
         whole spec tick): (B, T) tokens -> (logits (B, T, V), end state,
         per-step emits).  Bit-identical per position to T decode steps."""
-        return BL.rnn_verify(self.variables, tokens, self.cfg, state,
-                             tables=self.tables, live=live,
+        var, tb = prm if prm is not None else (self.variables, self.tables)
+        return BL.rnn_verify(var, tokens, self.cfg, state,
+                             tables=tb, live=live,
                              interpret=self._interpret)
 
     def spec_commit(self, state0: BL.RNNState, state_after: BL.RNNState,
@@ -199,20 +214,29 @@ class TransformerRuntime:
     def decode_step(self, tok: Array, state):
         return self._decode(self.params, tok, state)
 
-    def decode_fn(self, tok: Array, state, live: Optional[Array] = None):
+    @property
+    def jit_prm(self):
+        """The param tree a caller's own jit must thread as an argument (see
+        RNNRuntime.jit_prm — same constant-folding rationale)."""
+        return self.params
+
+    def decode_fn(self, tok: Array, state, live: Optional[Array] = None,
+                  prm=None):
         """Unjitted decode body for callers that jit a larger region (the
         continuous-batching engine's tick).  `live` (B,) freezes dead rows'
         cache writes and recurrent states bit-for-bit — with in-slot
         chunked prefill a dead row can be a slot MID-PREFILL, so the old
         zombie-writes-are-harmless argument no longer holds.  Dead rows'
         logits stay garbage; the engine never samples them."""
-        return T.decode_step(self.params, tok, state, self.cfg, live=live)
+        p = prm if prm is not None else self.params
+        return T.decode_step(p, tok, state, self.cfg, live=live)
 
-    def prefill_chunk(self, tokens: Array, state, n: Array):
+    def prefill_chunk(self, tokens: Array, state, n: Array, prm=None):
         """Unjitted prompt-chunk body (engine jits gather+chunk+write as one
         region): consume the first `n` of tokens against the carried cache;
         bucket padding past `n` is rewound off the attention pos."""
-        return T.prefill(self.params, tokens, state, self.cfg, n=n)
+        p = prm if prm is not None else self.params
+        return T.prefill(p, tokens, state, self.cfg, n=n)
 
     # -- speculative decoding (DESIGN.md §9) --------------------------------
     # Rollback here is byte surgery on the caches: snapshot the span of
@@ -233,12 +257,14 @@ class TransformerRuntime:
         del state  # the snapshot carries all rollback material
         return ()
 
-    def verify(self, tokens: Array, state, live: Optional[Array] = None):
+    def verify(self, tokens: Array, state, live: Optional[Array] = None,
+               prm=None):
         """Multi-token target step (unjitted body — the engine jits the
         whole spec tick): (B, T) tokens -> (logits (B, T, V), caches, ()).
         Per-position logits through the decode head shape; bit-identical
         per position to T decode steps (tests/test_spec_decode.py)."""
-        logits, state = T.verify_step(self.params, tokens, state, self.cfg,
+        p = prm if prm is not None else self.params
+        logits, state = T.verify_step(p, tokens, state, self.cfg,
                                       live=live)
         return logits, state, ()
 

@@ -567,3 +567,37 @@ def test_pool_state_is_constant_shape():
     shapes0 = [l.shape for l in jax.tree_util.tree_leaves(eng.pool)]
     eng.run(_requests(cfg.vocab, 4, rng_seed=31), realtime=False)
     assert [l.shape for l in jax.tree_util.tree_leaves(eng.pool)] == shapes0
+
+
+def test_params_are_jit_arguments_not_baked_constants():
+    """The engine's tick/prefill jits take the weight tree as an ARGUMENT
+    (`rt.jit_prm`), never a closure capture: closed-over weights get
+    constant-folded by XLA, which shifts logits ~1ulp against the
+    arg-passed `drive_session` jits and makes logits-level comparisons
+    unsound.  The observable property: swapping in a differently-
+    initialised tree of the same shape changes the streams WITHOUT a
+    single new trace — impossible if the weights were baked in."""
+    cell = "lstm"
+    cfg = dataclasses.replace(_rnn_cfg(cell), quant=QuantSpec(mode="none"))
+    var1 = BL.rnn_lm_init(jax.random.PRNGKey(0), cfg)
+    var2 = BL.rnn_lm_init(jax.random.PRNGKey(9), cfg)
+    rt1 = RNNRuntime(cfg, {"params": var1["params"], "state": var1["state"]})
+    rt2 = RNNRuntime(cfg, {"params": var2["params"], "state": var2["state"]})
+    eng = ServeEngine(rt1, cfg.vocab, slots=1, max_context=64,
+                      prefill_chunk=4)
+    req = Request(prompt=np.arange(8, dtype=np.int32) % cfg.vocab,
+                  max_tokens=10, temperature=0.0, top_k=0, seed=5)
+    c1, _ = eng.run([dataclasses.replace(req)], realtime=False)
+    traces = (eng.tick_traces, eng.prefill_traces)
+    assert traces[0] == 1
+    eng._prm = rt2.jit_prm  # same treedef/avals, different weights
+    c2, _ = eng.run([dataclasses.replace(req)], realtime=False)
+    assert (eng.tick_traces, eng.prefill_traces) == traces, \
+        "swapping the param ARGUMENT must not retrace anything"
+    assert c1[0].tokens != c2[0].tokens, \
+        "greedy streams ignored the swapped weights — params are baked in"
+    # and the swapped-in tree drives the engine to rt2's own oracle stream
+    out2, _ = drive_session(rt2, jnp.asarray(req.prompt)[None], cfg.vocab,
+                            gen=req.max_tokens, temperature=0.0, top_k=0,
+                            seed=req.seed)
+    assert c2[0].tokens == out2[0].tolist()
