@@ -53,7 +53,13 @@ def _serve_engine(quick=False):
     return serve_engine(quick=quick)
 
 
+def _packed_kernels(quick=False):
+    from benchmarks.packed_kernels import packed_kernels
+    return packed_kernels(quick=quick)
+
+
 BENCHES = {
+    "packed_kernels": _packed_kernels,
     "serve_decode": _serve_decode,
     "serve_engine": _serve_engine,
     "table1_char_lm": T.table1_char_lm,

@@ -7,8 +7,10 @@ measured packed bytes (what the matmuls actually stream) and per-session
 state bytes into results/benchmarks/serve_decode.json so BENCH trajectory
 data accumulates across PRs.
 
-Numbers are CPU-container interpret-mode throughputs at reduced scale: they
-track *relative* regressions of the serving path, not hardware ceilings.
+Numbers are CPU-container throughputs at reduced scale (backend-honest
+dispatch: packed weights serve through compiled dense-fallback tables on
+CPU, never interpret-mode Pallas — kernels/dispatch.py): they track
+*relative* regressions of the serving path, not hardware ceilings.
 """
 from __future__ import annotations
 

@@ -26,8 +26,10 @@ a full prefix re-prefill.  Rows whose pass/fail win condition was actually
 enforced carry `"asserted": true`; --quick runs record `"asserted": false`
 so the bench table cannot present unasserted wins as wins.
 
-Numbers are CPU-container interpret-mode throughputs at reduced scale: they
-track *relative* regressions of the scheduling path, not hardware ceilings.
+Numbers are CPU-container throughputs at reduced scale (backend-honest
+dispatch: packed weights serve through compiled dense-fallback tables on
+CPU, never interpret-mode Pallas — kernels/dispatch.py): they track
+*relative* regressions of the scheduling path, not hardware ceilings.
 """
 from __future__ import annotations
 
@@ -111,9 +113,10 @@ def _spec_rows(quick: bool) -> list:
 
     slots=1: speculation's serving win is PER-STREAM decode latency (the
     sequential-bottleneck regime it was invented for).  At full batch on
-    this container the comparison is compute-bound and the draft's packed
-    kernels are interpret-emulated, so the aggregate-throughput rows above
-    remain the batch story."""
+    this container the comparison is compute-bound — the draft serves
+    through the CPU dense-fallback tables (backend-honest dispatch), so a
+    draft step costs about what a target step costs and the
+    aggregate-throughput rows above remain the batch story."""
     from benchmarks.common import train_rnn
 
     # the spec configuration is the SAME in quick and full mode (the drain
@@ -172,8 +175,8 @@ def _spec_rows(quick: bool) -> list:
     # what the full run ASSERTS is the machine-independent win: trained
     # masters keep acceptance high (the paper's fp-tracking premise) and
     # speculation collapses the tick count by ~1+accept*k.  The wall-clock
-    # ratio is RECORDED, not asserted — on this container the draft's
-    # packed kernels are interpret-emulated (a draft step costs what a
+    # ratio is RECORDED, not asserted — on this container the draft runs
+    # the compiled dense CPU fallback (a draft step costs about what a
     # target step costs), so emitted-tok/s parity is the expected floor
     # and the ratio only exceeds 1 when per-tick dispatch overhead
     # dominates; asserting it made the recorded run hostage to host
@@ -313,11 +316,13 @@ def serve_engine(quick: bool = False, spec_only: bool = False):
 
     write("serve_engine", rows, meta={"quick": quick,
                                       "backend": jax.default_backend(),
-                                      "note": "reduced scale, interpret-mode "
-                                              "kernels on CPU; Poisson "
-                                              "mixed-length traffic replay; "
-                                              "spec rows drain one greedy "
-                                              "workload (realtime=False)"})
+                                      "note": "reduced scale; backend-honest "
+                                              "dispatch (CPU: compiled dense "
+                                              "fallback, no interpret-mode "
+                                              "Pallas); Poisson mixed-length "
+                                              "traffic replay; spec rows "
+                                              "drain one greedy workload "
+                                              "(realtime=False)"})
     return rows
 
 

@@ -11,9 +11,11 @@ The train->deploy handoff the paper is about, on its own model:
    codes, the artifact a deployment ships,
 3. generate text STATEFULLY through the unified recurrent runtime
    (serve/recurrent.py): one `prefill` over the prompt, then one
-   `decode_step` per token — each step a single fused Pallas launch per
-   layer (GEMV against packed codes + BN affine + gates; interpret mode on
-   CPU) with O(1) state instead of re-running the whole sequence,
+   `decode_step` per token — on accelerators the WHOLE tick (every layer's
+   accumulation-only GEMV + BN affine + gates, plus the logits head) is a
+   single fused Pallas launch; on CPU the same packed artifact serves
+   through the compiled dense fallback (DESIGN.md §11) — with O(1) state
+   instead of re-running the whole sequence,
 4. verify the stepwise decode matches the full-sequence `rnn_lm_apply`
    against the same packed tree.
 """

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from repro.core import quantize as Q
 from repro.core.qtensor import export_packed, is_qtensor
 from repro.core.recurrent_bn import BNParams, BNState, bn_apply, bn_init
+from repro.kernels import dispatch
 from repro.kernels import ops as OPS
 
 Array = jax.Array
@@ -300,22 +301,26 @@ def _bn_affine(p: BNParams, s: BNState, eps: float) -> tuple[Array, Array]:
 
 
 def rnn_decode_tables(variables: dict, cfg: RNNConfig, *,
-                      dense: bool = False) -> list:
+                      dense: Optional[bool] = None) -> list:
     """Per-session serving artifacts, computed ONCE and reused every step.
 
     Per layer: deterministic/packed weights, the h-side and x-side BN affines,
     the cell-norm affine, and — for layer 0 — the token gather table with the
     x-side BN already folded in (`rows_bn`), so serving never dequantizes the
-    embedding rows per call.  When `wh` is a packed QTensor the table also
-    carries gate-aligned codes for the fused Pallas decode-step kernel.
+    embedding rows per call.  When the whole tree serves packed, the tables
+    additionally carry the stacked whole-tick artifact (`tables[0]["tick"]`,
+    see `_tick_tables`) that `rnn_decode_step` feeds the single-launch fused
+    Pallas decode kernel.
 
-    `dense=True` expands packed weights into DENSE fp tables at session
-    setup, the same once-per-session dequantize layer 0's `rows_bn` already
-    gets: the serving tree stays the packed QTensor export (memory is still
-    the 2-bit codes), but every step runs plain dense matmuls.  That is the
-    right trade for backends whose packed kernels are emulated (CPU
-    interpret mode) and for roles where raw step latency beats memory
-    traffic — the speculative DRAFT runtime is the motivating case."""
+    `dense` expands packed weights into DENSE fp tables at session setup,
+    the same once-per-session dequantize layer 0's `rows_bn` already gets:
+    the serving tree stays the packed QTensor export (memory is still the
+    2-bit codes), but every step runs plain dense matmuls.  `dense=None`
+    asks `kernels/dispatch.py` for the backend-honest answer — True on CPU
+    (where packed Pallas kernels would only run emulated), False on real
+    accelerators.  Parity tests opt into the packed tables on CPU with an
+    explicit `dense=False`."""
+    dense = dispatch.prefer_dense(dense)
     params, bn_state = variables["params"], variables["state"]
     qw = _quantized_weights(params, cfg, None, training=False)
     tables = []
@@ -341,10 +346,68 @@ def rnn_decode_tables(variables: dict, cfg: RNNConfig, *,
         else:
             t["qx"] = qx
             t["scale_x"], t["shift_x"] = sx, tx
-        if is_qtensor(qh):
-            t["gate_codes"] = OPS.prepare_gate_codes(qh, cfg.n_gates)
         tables.append(t)
+    packed = (all(is_qtensor(t["qh"]) and t["qh"].scale is None
+                  for t in tables)
+              and all(is_qtensor(t["qx"]) and t["qx"].scale is None
+                      for t in tables[1:]))
+    if packed:
+        tables[0]["tick"] = _tick_tables(params, tables, cfg)
     return tables
+
+
+def _tick_tables(params: dict, tables: list, cfg: RNNConfig) -> dict:
+    """Stacked, padded, fold-complete operands for the whole-tick fused
+    kernel (`ops.fused_decode_tick`) — built once per serving session.
+
+    Everything a tick needs beyond the token ids and the carried h/c,
+    pre-stacked over layers so the kernel scans them with a static index:
+    gate-aligned packed codes for the h-side (all layers) and x-side
+    (layers >= 1), the frozen-BN affines with the QTensor alpha folded into
+    the scales and the bias folded into the input-side shifts (layer 0's
+    bias folds into the `rows0` gather table), the cell-norm affine, and
+    the padded fp head with finfo.min bias pads so pad logit columns can
+    never win the in-kernel argmax.  ARRAYS ONLY: the dict rides through
+    the engine's jits as part of the tables pytree argument."""
+    from repro.kernels.decode_step import BN_TILE
+
+    g, H = cfg.n_gates, cfg.d_hidden
+    hp = -(-H // BN_TILE) * BN_TILE
+    f32 = jnp.float32
+    pad_g = lambda a: jnp.pad(a.astype(f32).reshape(g, H),
+                              ((0, 0), (0, hp - H)))
+    pad_1 = lambda a: jnp.pad(a.astype(f32).reshape(1, H),
+                              ((0, 0), (0, hp - H)))
+    codes_h, sh, th, sc, tc = [], [], [], [], []
+    codes_x, sx, tx = [], [], []
+    rows0 = None
+    for l, t in enumerate(tables):
+        codes_h.append(OPS.prepare_gate_codes(t["qh"], g))
+        sh.append(pad_g(t["scale_h"] * t["qh"].alpha))
+        th.append(pad_g(t["shift_h"]))
+        sc.append(pad_1(t["scale_c"]))
+        tc.append(pad_1(t["shift_c"]))
+        if l == 0:
+            rows0 = (t["rows_bn"] + t["b"]).astype(f32)
+        else:
+            codes_x.append(OPS.prepare_gate_codes(t["qx"], g))
+            sx.append(pad_g(t["scale_x"] * t["qx"].alpha))
+            tx.append(pad_g(t["shift_x"] + t["b"]))
+    if not codes_x:  # single layer: dummy operand the kernel never reads
+        codes_x = [jnp.zeros_like(codes_h[0])]
+        sx = [jnp.zeros((g, hp), f32)]
+        tx = [jnp.zeros((g, hp), f32)]
+    head = params["head"]
+    V = cfg.vocab
+    vp = -(-V // BN_TILE) * BN_TILE
+    ws = jnp.pad(head["ws"].astype(f32), ((0, hp - H), (0, vp - V)))
+    bs = jnp.full((1, vp), jnp.finfo(f32).min, f32)
+    bs = bs.at[0, :V].set(head["bs"].astype(f32))
+    return {"rows0": rows0, "codes_h": jnp.stack(codes_h),
+            "codes_x": jnp.stack(codes_x), "scale_h": jnp.stack(sh),
+            "shift_h": jnp.stack(th), "scale_x": jnp.stack(sx),
+            "shift_x": jnp.stack(tx), "scale_c": jnp.stack(sc),
+            "shift_c": jnp.stack(tc), "ws": ws, "bs": bs}
 
 
 def _serve_lstm_step(t: dict, ax: Array, h: Array, c: Array):
@@ -497,11 +560,12 @@ def rnn_decode_step(variables: dict, tok: Array, cfg: RNNConfig,
                     interpret: Optional[bool] = None):
     """One serving step.  tok: (B,) or (B, 1) int32.
 
-    Returns (logits (B, vocab), new RNNState).  With a packed tree the
-    per-layer h-side GEMV + BN affine + bias + gate nonlinearities run as ONE
-    fused Pallas launch (kernels/decode_step.py); `fused=False` forces the
-    unfused qmatmul path (the parity oracle), `fused=True` requires packed
-    weights.
+    Returns (logits (B, vocab), new RNNState).  With packed tables the WHOLE
+    tick — every layer's accumulation-only h-side GEMV + BN affine + bias +
+    gate nonlinearities, plus the logits head when it fits VMEM — runs as
+    ONE fused Pallas launch (kernels/decode_step.py); `fused=False` forces
+    the unfused qmatmul path (the parity oracle), `fused=True` requires the
+    packed whole-tick tables.
 
     `live` (B,) bool freezes dead continuous-batching slots: masked rows
     keep their h/c (and pos) bit-for-bit while live rows step normally, so
@@ -515,28 +579,31 @@ def rnn_decode_step(variables: dict, tok: Array, cfg: RNNConfig,
     if tables is None:
         tables = rnn_decode_tables(variables, cfg)
 
+    tick = tables[0].get("tick")
+    use_tick = (tick is not None) if fused is None else fused
+    if use_tick:
+        if tick is None:
+            raise ValueError("fused decode needs packed (QTensor) weights; "
+                             "export the tree (dense=False tables) or pass "
+                             "fused=False")
+        logits, hT, cT, _greedy = OPS.fused_decode_tick(
+            tok, state.h.astype(cfg.dtype), state.c.astype(cfg.dtype), tick,
+            cell=cfg.cell, mode=tables[0]["qh"].mode, vocab=cfg.vocab,
+            live=live, interpret=interpret)
+        step = 1 if live is None else live.astype(state.pos.dtype)
+        return logits, RNNState(h=hT, c=cT, pos=state.pos + step)
+
     x = tok
     hT, cT = [], []
     for l, t in enumerate(tables):
         ax = _serve_x_preact(t, l, x, cfg.dtype)
         h = state.h[l].astype(cfg.dtype)
         c = state.c[l].astype(cfg.dtype)
-        use_fused = "gate_codes" in t if fused is None else fused
-        if use_fused:
-            if "gate_codes" not in t:
-                raise ValueError("fused decode needs a packed (QTensor) wh; "
-                                 "export the tree or pass fused=False")
-            hn, c_new = OPS.fused_rnn_decode_step(
-                h, c if cfg.cell == "lstm" else h, t["gate_codes"],
-                ax + t["b"], t["scale_h"] * t["qh"].alpha, t["shift_h"],
-                t["scale_c"], t["shift_c"], cell=cfg.cell,
-                mode=t["qh"].mode, live=live, interpret=interpret)
-            cn = c_new if cfg.cell == "lstm" else c
-        elif cfg.cell == "lstm":
+        if cfg.cell == "lstm":
             hn, cn = _serve_lstm_step(t, ax, h, c)
         else:
             hn, cn = _serve_gru_step(t, ax, h), c
-        if live is not None and not use_fused:
+        if live is not None:
             hn = jnp.where(live[:, None], hn, h)
             cn = jnp.where(live[:, None], cn, c)
         hT.append(hn)

@@ -1,26 +1,35 @@
-"""Fused Pallas decode-step kernel for the BN-LSTM / BN-GRU serving path.
+"""Whole-tick fused Pallas kernel for BN-LSTM / BN-GRU serving (DESIGN.md
+§11).
 
-One recurrent serving step against a *packed* recurrent weight is, unfused,
-~6 separate jitted ops: packed GEMV, alpha scale, BN affine, bias add, gate
-split, nonlinearities + cell update.  At decode the GEMV is (1..B, H) — pure
-memory traffic — so every extra launch round-trips the tiny activations
-through HBM.  This kernel does the whole step in ONE launch (DESIGN.md §6):
+One batched decode tick — ALL layers, the logits head, and greedy argmax —
+is ONE Pallas launch.  Unfused, a tick is ~6 ops per layer plus the head:
+every one round-trips the tiny (B, H) activations through HBM, and at
+decode the GEMVs are pure memory traffic, so launch overhead and HBM hops
+dominate.  This kernel keeps h and c for every layer in VMEM across the
+whole tick:
 
-  * the h-side GEMV against gate-aligned packed codes (2-bit ternary / 1-bit
-    binary, decoded to ±1/0 on the VPU exactly like kernels/packed_matmul.py),
-  * the per-column frozen-BN affine (scale folds the QTensor alpha),
-  * the input-side pre-activation + bias add (`ax`, computed by the caller —
-    for layer 0 it is a single gather of the BN-folded row table),
-  * the gate nonlinearities and hidden/cell update (LSTM or GRU).
+  * the h-side GEMV per layer runs ACCUMULATION-ONLY against gate-aligned
+    packed codes (`packed_matmul.accumulate_gemv`: codes decode to boolean
+    plus/minus masks, activations are selected and summed — zero multiplies
+    on the weight path, asserted statically in tier-1),
+  * the per-column frozen-BN affine (scale folds the QTensor alpha) and the
+    gate nonlinearities + cell update (LSTM or GRU) follow in-register,
+  * layers >= 1 compute their input-side pre-activation in-kernel, the same
+    accumulation-only GEMV against the stacked x-side codes (scale folds
+    alpha, shift folds the BN shift AND the bias); layer 0's token gather
+    happens outside (it is an XLA gather, not a launch),
+  * the `live` mask freezes dead continuous-batching rows in-kernel — a
+    select, not a lerp, so dead-row garbage (possibly non-finite) never
+    propagates,
+  * optionally (static `with_head`, on when the padded head fits VMEM) the
+    fp logits head and a greedy argmax run in the same launch.
 
-Tiling: grid over 128-wide tiles of the gate width H; every gate's code
-block for a tile arrives stacked along a leading gate axis, so the cell
-update has f/i/o/g (or r/z/g) together without cross-tile traffic.  The
-previous hidden vector (the GEMV operand) rides along whole — it is (B, Hp)
-and tiny.  All operands arrive padded from `ops.fused_rnn_decode_step`:
-B to a sublane multiple, H to the 128-lane tile (per gate, so gate
-boundaries stay tile-aligned; pad K lanes multiply zero-padded activations
-and contribute nothing).
+Everything arrives padded from `ops.fused_decode_tick`: B to a sublane
+multiple, H per gate to the 128-lane tile, codes' K rows to Hp/GROUP.  Pad
+lanes carry zero activations, zero affine scale/shift and zero bias, so
+pad h/c stay exactly 0.0 across layers (binary's pad-code-decodes-to-−1
+quirk contributes select(minus, 0, 0) = 0) and pad logits columns sit at
+finfo.min via the padded bias, below any real logit the argmax could pick.
 """
 from __future__ import annotations
 
@@ -31,116 +40,123 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.quantize import BINARY_GROUP, TERNARY_GROUP
-from repro.kernels.packed_matmul import (_unpack_binary_tile,
-                                         _unpack_ternary_tile)
+from repro.kernels import dispatch
+from repro.kernels.packed_matmul import accumulate_gemv
 
 Array = jax.Array
 
-BN_TILE = 128  # lane tile over the gate width
+BN_TILE = 128  # lane tile the gate width is padded to
 
 
-def _gates(x, codes_ref, ax_ref, scale_ref, shift_ref, hp: int, mode: str,
-           n_gates: int):
-    """Per-gate pre-activations a_i = (x @ W_i) * scale_i + shift_i + ax_i."""
-    unpack = _unpack_ternary_tile if mode == "ternary" else _unpack_binary_tile
-    out = []
-    for i in range(n_gates):
-        w = unpack(codes_ref[i], hp).astype(x.dtype)
-        a = jnp.dot(x, w, preferred_element_type=jnp.float32)
-        out.append(a * scale_ref[i:i + 1, :] + shift_ref[i:i + 1, :]
-                   + ax_ref[:, i, :])
-    return out
+def _tick_kernel(ax0_ref, h_ref, c_ref, live_ref, ch_ref, cx_ref, sh_ref,
+                 th_ref, sx_ref, tx_ref, sc_ref, tc_ref, *refs,
+                 cell: str, mode: str, n_layers: int, n_gates: int,
+                 with_head: bool):
+    if with_head:
+        ws_ref, bs_ref, h_out, c_out, lg_out, tok_out = refs
+    else:
+        h_out, c_out = refs
+
+    ax = ax0_ref[...]            # (Bp, g, Hp) — layer 0, gathered outside
+    live = live_ref[...] > 0     # (Bp, Hp)
+    h_new = None
+    for l in range(n_layers):
+        h_prev = h_ref[l]
+        c_prev = c_ref[l]
+        # accumulation-only h-side GEMV per gate; the BN scale below folds
+        # the QTensor alpha, so the codes stay raw ±1/0 masks
+        ah = [accumulate_gemv(h_prev, ch_ref[l, i], mode=mode)
+              for i in range(n_gates)]
+        if cell == "lstm":
+            f, i_, o, g = [ah[i] * sh_ref[l, i:i + 1, :]
+                           + th_ref[l, i:i + 1, :] + ax[:, i]
+                           for i in range(4)]
+            c_new = jax.nn.sigmoid(f) * c_prev + jax.nn.sigmoid(i_) * jnp.tanh(g)
+            cn = c_new * sc_ref[l] + tc_ref[l]  # cell norm (1s/0s when off)
+            # dead slots keep h/c bit-for-bit: a select, not a lerp —
+            # dead-row garbage may be non-finite and 0*inf=NaN
+            h_new = jnp.where(live, jax.nn.sigmoid(o) * jnp.tanh(cn), h_prev)
+            c_sel = jnp.where(live, c_new, c_prev)
+        else:
+            # the h-side BN shift is NOT folded into ax: r gates the whole
+            # normalized ah_g term (core/bnlstm._gru_step)
+            ahn = [ah[i] * sh_ref[l, i:i + 1, :] + th_ref[l, i:i + 1, :]
+                   for i in range(3)]
+            r = jax.nn.sigmoid(ax[:, 0] + ahn[0])
+            z = jax.nn.sigmoid(ax[:, 1] + ahn[1])
+            g = jnp.tanh(ax[:, 2] + r * ahn[2])
+            h_new = jnp.where(live, (1.0 - z) * h_prev + z * g, h_prev)
+            c_sel = c_prev  # GRU carries no cell
+        h_out[l] = h_new
+        c_out[l] = c_sel
+        if l + 1 < n_layers:
+            # next layer's input-side preact, in-kernel: scale folds the
+            # x-side alpha, shift folds BN shift + bias
+            ax = jnp.stack(
+                [accumulate_gemv(h_new, cx_ref[l, i], mode=mode)
+                 * sx_ref[l, i:i + 1, :] + tx_ref[l, i:i + 1, :]
+                 for i in range(n_gates)], axis=1)
+
+    if with_head:
+        # fp head: multiplies here consume the fused tick's OUTPUT
+        # activations against the fp head weight — the mul-free claim is
+        # about the packed weight path, which ended at h_new
+        lg = jnp.dot(h_new, ws_ref[...], preferred_element_type=jnp.float32) \
+            + bs_ref[...]
+        lg_out[...] = lg
+        vp = lg.shape[-1]
+        mx = jnp.max(lg, axis=-1, keepdims=True)
+        col = jax.lax.broadcasted_iota(jnp.int32, lg.shape, 1)
+        idx = jnp.min(jnp.where(lg == mx, col, vp), axis=-1, keepdims=True)
+        tok_out[...] = jnp.broadcast_to(idx, tok_out.shape)
 
 
-def _lstm_kernel(x_ref, c_ref, hprev_ref, live_ref, codes_ref, ax_ref,
-                 scale_ref, shift_ref, cs_ref, ct_ref, h_out, c_out,
-                 *, hp: int, mode: str):
-    f, i, o, g = _gates(x_ref[...], codes_ref, ax_ref, scale_ref, shift_ref,
-                        hp, mode, 4)
-    c_new = jax.nn.sigmoid(f) * c_ref[...] + jax.nn.sigmoid(i) * jnp.tanh(g)
-    cn = c_new * cs_ref[...] + ct_ref[...]  # cell-norm affine (1s/0s when off)
-    # continuous batching: dead slots (live == 0) keep h/c bit-for-bit; a
-    # select, not a lerp — dead-row garbage may be non-finite and 0*inf=NaN.
-    # hprev is the same array as x with a TILE spec, so the select needs no
-    # cross-tile reads and the launch shape is occupancy-independent.
-    m = live_ref[...] > 0
-    h_out[...] = jnp.where(m, jax.nn.sigmoid(o) * jnp.tanh(cn), hprev_ref[...])
-    c_out[...] = jnp.where(m, c_new, c_ref[...])
+def fused_tick(ax0: Array, h: Array, c: Array, live: Array, codes_h: Array,
+               codes_x: Array, scale_h: Array, shift_h: Array,
+               scale_x: Array, shift_x: Array, scale_c: Array,
+               shift_c: Array, ws, bs, *, cell: str, mode: str,
+               interpret: bool | None = None):
+    """Padded-operand entry (see ops.fused_decode_tick for the public API).
 
+    ax0: (Bp, g, Hp) layer-0 input preact (bias folded); h/c: (L, Bp, Hp);
+    live: (Bp, Hp) fp32 0/1 row mask (all-ones when every slot is live — the
+    mask is ALWAYS an operand, so masked and unmasked ticks share one launch
+    signature and occupancy changes never relaunch a new shape);
+    codes_h: (L, g, Hp/G, Hp) uint32; codes_x: (max(L-1,1), g, Hp/G, Hp);
+    scale_h/shift_h: (L, g, Hp); scale_x/shift_x like codes_x's leading dim;
+    scale_c/shift_c: (L, 1, Hp); ws: (Hp, Vp) fp32 + bs: (1, Vp) enable the
+    in-kernel head (pass None to skip it — wrapper applies the head outside
+    when it would not fit VMEM).
 
-def _gru_kernel(x_ref, h_ref, live_ref, codes_ref, ax_ref, scale_ref,
-                shift_ref, h_out, *, hp: int, mode: str):
-    # ax already includes the bias; the h-side BN shift is NOT folded into ax
-    # because r gates the whole normalized ah_g term (core/bnlstm._gru_step).
-    unpack = _unpack_ternary_tile if mode == "ternary" else _unpack_binary_tile
-    x = x_ref[...]
-    ah = []
-    for i in range(3):
-        w = unpack(codes_ref[i], hp).astype(x.dtype)
-        a = jnp.dot(x, w, preferred_element_type=jnp.float32)
-        ah.append(a * scale_ref[i:i + 1, :] + shift_ref[i:i + 1, :])
-    r = jax.nn.sigmoid(ax_ref[:, 0, :] + ah[0])
-    z = jax.nn.sigmoid(ax_ref[:, 1, :] + ah[1])
-    g = jnp.tanh(ax_ref[:, 2, :] + r * ah[2])
-    h_new = (1.0 - z) * h_ref[...] + z * g
-    h_out[...] = jnp.where(live_ref[...] > 0, h_new, h_ref[...])
-
-
-def fused_decode_step(x: Array, carry: Array, codes: Array, ax: Array,
-                      scale: Array, shift: Array, cscale: Array, cshift: Array,
-                      live: Array, *, cell: str, mode: str,
-                      interpret: bool | None = None):
-    """Padded-operand entry (see ops.fused_rnn_decode_step for the public API).
-
-    x, carry: (Bp, Hp) fp32; codes: (g, Hp/G, Hp) uint32 gate-aligned;
-    ax: (Bp, g, Hp); scale/shift: (g, Hp); cscale/cshift: (1, Hp);
-    live: (Bp, Hp) fp32 0/1 row mask (all-ones when every slot is live —
-    the mask is ALWAYS an operand, so masked and unmasked ticks share one
-    launch signature and occupancy changes never relaunch a new shape).
-    Returns (h', c') fp32 (Bp, Hp) for LSTM, h' alone for GRU.
+    Returns (h', c') or (h', c', logits (Bp, Vp), greedy (Bp, TILE) int32).
     """
     group = TERNARY_GROUP if mode == "ternary" else BINARY_GROUP
-    g, kg, hp = codes.shape
-    bp = x.shape[0]
+    L, g, kg, hp = codes_h.shape
+    bp = ax0.shape[0]
     if hp % BN_TILE or kg * group != hp:
-        raise ValueError(f"codes {codes.shape} must be Hp/{group} x Hp with "
-                         f"Hp % {BN_TILE} == 0")
-    if live.shape != (bp, hp):
-        raise ValueError(f"live mask {live.shape} must match padded ({bp}, {hp})")
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
-    bn = BN_TILE
-    grid = (hp // bn,)
+        raise ValueError(f"codes {codes_h.shape} must be Hp/{group} x Hp "
+                         f"with Hp % {BN_TILE} == 0")
+    if h.shape != (L, bp, hp) or live.shape != (bp, hp):
+        raise ValueError(f"state {h.shape} / live {live.shape} must match "
+                         f"padded ({L}, {bp}, {hp})")
+    with_head = ws is not None
+    interpret = dispatch.resolve_interpret(interpret)
 
-    full = pl.BlockSpec((bp, hp), lambda j: (0, 0))
-    tile = pl.BlockSpec((bp, bn), lambda j: (0, j))
-    cspec = pl.BlockSpec((g, kg, bn), lambda j: (0, 0, j))
-    axspec = pl.BlockSpec((bp, g, bn), lambda j: (0, 0, j))
-    vspec = pl.BlockSpec((g, bn), lambda j: (0, j))
-    rowspec = pl.BlockSpec((1, bn), lambda j: (0, j))
-    oshape = jax.ShapeDtypeStruct((bp, hp), jnp.float32)
-
-    if cell == "lstm":
-        kernel = functools.partial(_lstm_kernel, hp=hp, mode=mode)
-        return pl.pallas_call(
-            kernel,
-            grid=grid,
-            # x rides along twice: once whole (the GEMV operand) and once
-            # tiled (hprev for the dead-slot select)
-            in_specs=[full, tile, tile, tile, cspec, axspec, vspec, vspec,
-                      rowspec, rowspec],
-            out_specs=(tile, tile),
-            out_shape=(oshape, oshape),
-            interpret=interpret,
-            name=f"{mode}_lstm_decode_step",
-        )(x, carry, x, live, codes, ax, scale, shift, cscale, cshift)
-    kernel = functools.partial(_gru_kernel, hp=hp, mode=mode)
+    kernel = functools.partial(_tick_kernel, cell=cell, mode=mode,
+                               n_layers=L, n_gates=g, with_head=with_head)
+    state_shape = jax.ShapeDtypeStruct((L, bp, hp), jnp.float32)
+    out_shape = [state_shape, state_shape]
+    args = [ax0, h, c, live, codes_h, codes_x, scale_h, shift_h, scale_x,
+            shift_x, scale_c, shift_c]
+    if with_head:
+        vp = ws.shape[1]
+        args += [ws, bs]
+        out_shape += [jax.ShapeDtypeStruct((bp, vp), jnp.float32),
+                      jax.ShapeDtypeStruct((bp, BN_TILE), jnp.int32)]
+    dispatch.count_launch(f"{mode}_{cell}_decode_tick")
     return pl.pallas_call(
         kernel,
-        grid=grid,
-        in_specs=[full, tile, tile, cspec, axspec, vspec, vspec],
-        out_specs=tile,
-        out_shape=oshape,
+        out_shape=tuple(out_shape),
         interpret=interpret,
-        name=f"{mode}_gru_decode_step",
-    )(x, carry, live, codes, ax, scale, shift)
+        name=f"{mode}_{cell}_decode_tick",
+    )(*args)

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.core.qtensor import QTensor
 from repro.core.quantize import BINARY_GROUP, TERNARY_GROUP
+from repro.kernels import dispatch
 from repro.kernels import packed_matmul as PK
 
 Array = jax.Array
@@ -36,6 +37,9 @@ def packed_matmul(x: Array, wp: Array, k: int, alpha=1.0, *, mode: str = "ternar
     """y = alpha * (x @ unpack(wp)).  x: (..., K); wp: (K/G, N) uint32.
 
     Leading batch dims are flattened into M; M/N/K padded to block multiples.
+    Decode shapes (M <= 8 rows) route to the accumulation-only GEMV kernel
+    (`packed_gemv` — zero weight-path multiplies); larger M keeps the MXU
+    decode-tile path, which is the right engine for prefill GEMM.
     """
     group = TERNARY_GROUP if mode == "ternary" else BINARY_GROUP
     lead = x.shape[:-1]
@@ -44,13 +48,20 @@ def packed_matmul(x: Array, wp: Array, k: int, alpha=1.0, *, mode: str = "ternar
     xm = x.reshape(-1, K)
     M = xm.shape[0]
 
-    bm = 128 if M >= 128 else 8
-    bn = 128
-    bk = 256 if K % 256 == 0 else group * 8
-    xm = _pad_to(_pad_to(xm, bm, 0), bk, 1)
-    wpp = _pad_to(_pad_to(wp, bk // group, 0), bn, 1)
-    y = PK.packed_matmul(xm, wpp, xm.shape[1], mode=mode,
-                         block=(bm, bn, bk), interpret=interpret)
+    if M <= 8:
+        xm = _pad_to(_pad_to(xm.astype(jnp.float32), 8, 0), group, 1)
+        kp = max(xm.shape[1], wp.shape[0] * group)
+        xm = jnp.pad(xm, ((0, 0), (0, kp - xm.shape[1])))
+        wpp = jnp.pad(wp, ((0, kp // group - wp.shape[0]), (0, -N % 128)))
+        y = PK.packed_gemv(xm, wpp, kp, mode=mode, interpret=interpret)
+    else:
+        bm = 128 if M >= 128 else 8
+        bn = 128
+        bk = 256 if K % 256 == 0 else group * 8
+        xm = _pad_to(_pad_to(xm, bm, 0), bk, 1)
+        wpp = _pad_to(_pad_to(wp, bk // group, 0), bn, 1)
+        y = PK.packed_matmul(xm, wpp, xm.shape[1], mode=mode,
+                             block=(bm, bn, bk), interpret=interpret)
     y = y[:M, :N] * jnp.asarray(alpha, jnp.float32)
     return y.reshape(*lead, N)
 
@@ -104,6 +115,15 @@ def qmatmul(x: Array, w, *, interpret: Optional[bool] = None) -> Array:
     if x.shape[-1] != w.k:
         raise ValueError(f"qmatmul contraction mismatch: x {x.shape} vs "
                          f"QTensor k={w.k}")
+    if not dispatch.use_pallas(interpret):
+        # backend-honest CPU fallback (kernels/dispatch.py): dequantize and
+        # run a dense matmul instead of emulating the Pallas kernel in
+        # interpret mode.  Memory stays the packed codes; serving paths that
+        # hit this every step cache the dense weight once per session
+        # instead (rnn_decode_tables(dense=True)).  interpret=True is the
+        # parity-test opt-in that still forces the emulated kernel here.
+        y = jnp.dot(x.astype(jnp.float32), w.dequantize(jnp.float32))
+        return y.astype(x.dtype)
     # zero-pad activations to the codes' K coverage: pad lanes multiply
     # zeros, so pack-time pad codes contribute exactly nothing.
     kp = w.codes.shape[-2] * w.group
@@ -120,7 +140,7 @@ def qmatmul(x: Array, w, *, interpret: Optional[bool] = None) -> Array:
 
 
 # ---------------------------------------------------------------------------
-# fused recurrent decode step (kernels/decode_step.py)
+# fused whole-tick recurrent decode (kernels/decode_step.py)
 # ---------------------------------------------------------------------------
 
 
@@ -153,50 +173,73 @@ def prepare_gate_codes(qt: QTensor, n_gates: int) -> Array:
     return jnp.stack(gates)
 
 
-def fused_rnn_decode_step(h: Array, carry: Array, gate_codes: Array,
-                          ax: Array, scale: Array, shift: Array,
-                          scale_c: Array, shift_c: Array, *, cell: str,
-                          mode: str, live: Optional[Array] = None,
-                          interpret: Optional[bool] = None):
-    """One BN-LSTM/BN-GRU serving step in a single Pallas launch.
+# padded head weight bytes the fused tick will keep in VMEM alongside the
+# codes; beyond this the head runs as one XLA dot outside the launch
+HEAD_VMEM_BYTES = 4 * 1024 * 1024
 
-    h:     (B, H) previous hidden (the GEMV operand).
-    carry: (B, H) previous cell state for LSTM; pass h for GRU.
-    gate_codes: (n_gates, Hp/G, Hp) from `prepare_gate_codes`.
-    ax:    (B, n_gates*H) input-side BN'd pre-activation INCLUDING the bias.
-    scale/shift: (n_gates*H,) frozen h-side BN affine; `scale` must already
-           fold the QTensor alpha (the kernel sees raw ±1/0 codes).
-    scale_c/shift_c: (H,) cell-norm affine (ones/zeros when cell_norm off).
-    live:  optional (B,) bool — continuous-batching occupancy mask; rows
-           where live is False return their h/c unchanged (bit-for-bit).
-           The kernel ALWAYS receives a mask operand (ones when None), so
-           masked and unmasked ticks share one launch signature and
-           occupancy changes never change the launch shape.
-    Returns (h', c'); c' is the unchanged carry for GRU.
+
+def fused_decode_tick(tok: Array, h: Array, c: Array, tick: dict, *,
+                      cell: str, mode: str, vocab: int,
+                      live: Optional[Array] = None,
+                      interpret: Optional[bool] = None):
+    """One whole-model decode tick in a SINGLE Pallas launch.
+
+    tok: (B,) int32; h/c: (L, B, H) carried state; `tick` is the stacked
+    artifact `core.bnlstm.rnn_decode_tables` builds once per session
+    (arrays only — it travels through jits as a pytree argument):
+
+      rows0            (vocab, g*H)  layer-0 token rows, BN + bias folded
+      codes_h          (L, g, Hp/G, Hp)   gate-aligned packed wh codes
+      codes_x          (max(L-1,1), g, Hp/G, Hp)  packed wx codes, l >= 1
+      scale_h/shift_h  (L, g, Hp)    h-side BN affine, alpha folded in scale
+      scale_x/shift_x  (like codes_x's lead, g, Hp)  x-side BN + bias fold
+      scale_c/shift_c  (L, 1, Hp)    cell-norm affine
+      ws/bs            (Hp, Vp) / (1, Vp)  fp head, bias pads = finfo.min
+
+    The layer-0 gather runs outside (an XLA gather is not a launch); the
+    kernel scans the layers with h/c in VMEM, runs the accumulation-only
+    GEMVs, and — when the padded head fits the VMEM budget — the logits
+    head and greedy argmax too.  `live` (B,) bool freezes dead rows
+    in-kernel, bit-for-bit.
+
+    Returns (logits (B, vocab), h', c', greedy (B,) int32).
     """
     from repro.kernels import decode_step as DK
 
-    g, kg, hp = gate_codes.shape
-    B, H = h.shape
+    L, B, H = h.shape
+    codes_h = tick["codes_h"]
+    g, hp = codes_h.shape[1], codes_h.shape[-1]
     bp = -(-max(B, 1) // 8) * 8
     f32 = jnp.float32
-    pad_m = lambda a: jnp.pad(a.astype(f32),
-                              ((0, bp - a.shape[0]), (0, hp - a.shape[1])))
-    pad_v = lambda a, r: jnp.pad(a.astype(f32).reshape(r, -1),
-                                 ((0, 0), (0, hp - H)))
-    ax3 = jnp.pad(ax.astype(f32).reshape(B, g, H),
+
+    rows = jnp.take(tick["rows0"], tok, axis=0).astype(f32)     # (B, g*H)
+    ax0 = jnp.pad(rows.reshape(B, g, H),
                   ((0, bp - B), (0, 0), (0, hp - H)))
+    pad_state = lambda a: jnp.pad(a.astype(f32),
+                                  ((0, 0), (0, bp - B), (0, hp - H)))
     if live is None:
         live_m = jnp.ones((bp, hp), f32)
-    else:  # pad rows/lanes 0: they select hprev/carry, then get sliced off
-        live_m = pad_m(jnp.broadcast_to(live.astype(f32)[:, None], (B, H)))
-    args = (pad_m(h), pad_m(carry), gate_codes, ax3,
-            pad_v(scale, g), pad_v(shift, g))
-    if cell == "lstm":
-        hn, cn = DK.fused_decode_step(*args, pad_v(scale_c, 1),
-                                      pad_v(shift_c, 1), live_m, cell=cell,
-                                      mode=mode, interpret=interpret)
-        return hn[:B, :H].astype(h.dtype), cn[:B, :H].astype(h.dtype)
-    hn = DK.fused_decode_step(*args, None, None, live_m, cell=cell, mode=mode,
-                              interpret=interpret)
-    return hn[:B, :H].astype(h.dtype), carry
+    else:  # pad rows 0: they select their (zero) previous state
+        live_m = jnp.pad(jnp.broadcast_to(live.astype(f32)[:, None], (B, hp)),
+                         ((0, bp - B), (0, 0)))
+
+    ws, bs = tick["ws"], tick["bs"]
+    vp = ws.shape[1]
+    with_head = (hp * vp + 2 * bp * vp) * 4 <= HEAD_VMEM_BYTES
+    out = DK.fused_tick(ax0, pad_state(h), pad_state(c), live_m, codes_h,
+                        tick["codes_x"], tick["scale_h"], tick["shift_h"],
+                        tick["scale_x"], tick["shift_x"], tick["scale_c"],
+                        tick["shift_c"], ws if with_head else None,
+                        bs if with_head else None, cell=cell, mode=mode,
+                        interpret=interpret)
+    if with_head:
+        hn, cn, lg, tk = out
+        logits = lg[:B, :vocab]
+        greedy = tk[:B, 0]
+    else:  # head too big for VMEM: one XLA dot outside, still one launch
+        hn, cn = out
+        lg = jnp.dot(hn[-1], ws, preferred_element_type=f32) + bs
+        logits = lg[:B, :vocab]
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return (logits.astype(h.dtype), hn[:, :B, :H].astype(h.dtype),
+            cn[:, :B, :H].astype(h.dtype), greedy)

@@ -23,6 +23,7 @@ from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro.core.quantize import BINARY_GROUP, TERNARY_GROUP
+from repro.kernels import dispatch
 
 Array = jax.Array
 
@@ -41,6 +42,100 @@ def _unpack_binary_tile(packed: Array, bk: int) -> Array:
     bits = (packed[:, None, :] >> shifts) & jnp.uint32(1)
     vals = bits.astype(jnp.float32) * 2.0 - 1.0
     return vals.reshape(bk, packed.shape[-1])
+
+
+def code_masks(packed: Array, *, mode: str) -> tuple[Array, Array]:
+    """Decode packed codes to (plus, minus) BOOLEAN masks — no arithmetic on
+    the weight values, ever.  packed: (K/G, N) uint32 -> two (K, N) bools.
+
+    Ternary: plus where code==0b01, minus where code==0b11, neither for the
+    zero code.  Binary: plus where bit==1, minus where bit==0.  The masks
+    are what the accumulation-only GEMV selects activations through; the
+    ±1/0 weight VALUES never materialize as floats on this path.
+    """
+    if mode == "ternary":
+        # iota << 1, not 2*iota: even the shift table is mul-free so the
+        # static accumulation-only assertion holds over the whole path (a
+        # stepped arange would materialize a constant Pallas can't capture)
+        shifts = (jnp.arange(TERNARY_GROUP, dtype=jnp.uint32)
+                  << jnp.uint32(1))[None, :, None]
+        codes = (packed[:, None, :] >> shifts) & jnp.uint32(3)
+        k = packed.shape[0] * TERNARY_GROUP
+        plus = (codes == 1).reshape(k, packed.shape[-1])
+        minus = (codes == 3).reshape(k, packed.shape[-1])
+        return plus, minus
+    shifts = jnp.arange(BINARY_GROUP, dtype=jnp.uint32)[None, :, None]
+    bits = (packed[:, None, :] >> shifts) & jnp.uint32(1)
+    k = packed.shape[0] * BINARY_GROUP
+    plus = (bits == 1).reshape(k, packed.shape[-1])
+    return plus, jnp.logical_not(plus)
+
+
+def accumulate_gemv(x: Array, packed: Array, *, mode: str) -> Array:
+    """y = x @ unpack(packed) with ZERO multiplies — the paper's MAC-free
+    inner loop (DESIGN.md §11).  x: (B, K) fp; packed: (K/G, N) uint32;
+    returns (B, N) fp32.
+
+    The decoded weight is never a float: codes become (plus, minus) boolean
+    masks, each output column is `sum(select(plus, x, 0)) -
+    sum(select(minus, x, 0))` — shift/and/compare/select/add only.  Tier-1
+    asserts this statically (`dispatch.assert_accumulation_only`): the jaxpr
+    contains no `mul`/`dot_general`.  B is a static Python loop: at decode
+    B is the (padded) slot count, <= 8, and unrolling keeps every step a
+    plain lane-wise select + row reduction the VPU streams.
+
+    Binary pad safety: a ZERO pad code decodes to minus (−1), but pad
+    activation lanes are zero-padded by every caller, so `select(minus, 0,
+    0)` contributes exactly nothing — same invariant the MXU path relies
+    on.
+    """
+    x = x.astype(jnp.float32)
+    plus, minus = code_masks(packed, mode=mode)
+    rows = []
+    for b in range(x.shape[0]):
+        xb = x[b, :, None]  # (K, 1) broadcasts across the N output columns
+        t = jnp.where(plus, xb, 0.0) - jnp.where(minus, xb, 0.0)
+        rows.append(jnp.sum(t, axis=0))
+    return jnp.stack(rows)
+
+
+def _gemv_kernel(x_ref, wp_ref, o_ref, *, mode: str):
+    o_ref[...] = accumulate_gemv(x_ref[...], wp_ref[...], mode=mode)
+
+
+def packed_gemv(x: Array, wp: Array, k: int, *, mode: str,
+                block_n: int = 128, interpret: bool | None = None) -> Array:
+    """Accumulation-only decode-shape matmul: x (Bp, K) with Bp <= 8, packed
+    wp (K/G, N) -> (Bp, N) fp32, one launch, grid over N tiles.
+
+    This is the mul-free sibling of `packed_matmul`: where the MXU path
+    decodes codes to ±1 floats and feeds a dense dot (right for prefill
+    GEMM, M large), this kernel selects/accumulates activations through the
+    code masks — the arithmetic the paper's ASIC does.  `ops.packed_matmul`
+    routes M <= 8 here and larger M to the MXU path."""
+    group = TERNARY_GROUP if mode == "ternary" else BINARY_GROUP
+    bp, K = x.shape
+    N = wp.shape[1]
+    if K != k or wp.shape[0] * group != K:
+        raise ValueError(f"packed K mismatch: {wp.shape[0]}*{group} != {K}")
+    if N % block_n:
+        raise ValueError(f"N={N} must be a multiple of block_n={block_n}")
+    interpret = dispatch.resolve_interpret(interpret)
+
+    kernel = functools.partial(_gemv_kernel, mode=mode)
+    dispatch.count_launch(f"{mode}_packed_gemv")
+    return pl.pallas_call(
+        kernel,
+        grid=(N // block_n,),
+        in_specs=[
+            pl.BlockSpec((bp, K), lambda j: (0, 0)),
+            pl.BlockSpec((K // group, block_n), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bp, block_n), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((bp, N), jnp.float32),
+        interpret=interpret,
+        name=f"{mode}_packed_gemv",
+    )(x, wp)
 
 
 def _matmul_kernel(x_ref, wp_ref, o_ref, acc_ref, *, bk: int, mode: str):
@@ -72,10 +167,10 @@ def packed_matmul(x: Array, wp: Array, k: int, *, mode: str,
     bm, bn, bk = block
     if M % bm or N % bn or K % bk or bk % group:
         raise ValueError(f"blocks {block} must divide {(M, N, K)} (bk % {group} == 0)")
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+    interpret = dispatch.resolve_interpret(interpret)
 
     kernel = functools.partial(_matmul_kernel, bk=bk, mode=mode)
+    dispatch.count_launch(f"{mode}_packed_matmul")
     return pl.pallas_call(
         kernel,
         grid=(M // bm, N // bn, K // bk),
@@ -125,11 +220,11 @@ def quantize_pack(w: Array, u: Array, alpha, *, mode: str,
     bk, bn = block
     if K % bk or N % bn or bk % group:
         raise ValueError(f"blocks {block} must divide {(K, N)} (bk % {group} == 0)")
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+    interpret = dispatch.resolve_interpret(interpret)
     alpha = jnp.asarray(alpha, jnp.float32).reshape(1, 1)
 
     kernel = functools.partial(_qpack_kernel, mode=mode)
+    dispatch.count_launch(f"{mode}_quantize_pack")
     return pl.pallas_call(
         kernel,
         grid=(K // bk, N // bn),

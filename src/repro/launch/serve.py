@@ -11,8 +11,9 @@ same prefill → sample → decode loop through the unified recurrent runtime
 is exported ONCE into packed `QTensor`s (core/qtensor.py) and prefill/decode
 stream the packed codes through the Pallas kernels — the reported packed MB
 is the memory the decode loop actually reads, not an analytic estimate.
-For --arch rnn-paper the per-step work is the fused Pallas decode-step
-kernel (kernels/decode_step.py): one launch per layer per token.  On a pod
+For --arch rnn-paper the per-step work is the whole-tick fused kernel
+(kernels/decode_step.py): ONE launch per token for all layers + head on
+accelerators, the compiled dense fallback on CPU (DESIGN.md §11).  On a pod
 the same entry point runs under the production mesh with the decode-time
 cache shardings from launch/sharding.py.
 

@@ -379,6 +379,13 @@ class ServeEngine:
         self.prefill_traces = 0
         self.spec_traces = 0
         self.splice_traces = 0
+        # Pallas launches the decode tick dispatches per call, measured the
+        # same way tick_traces is: the kernel wrappers bump a trace-time
+        # counter (kernels/dispatch.py) and the tick body diffs it while
+        # being traced.  1 on the packed whole-tick path, 0 on the CPU
+        # dense-fallback path (no interpret-mode Pallas in serving), -1
+        # until the first tick traces.
+        self.tick_launches = -1
         self._occupancy_sum = 0.0
         self._gen_tokens = 0      # cumulative over the engine's life
         self._drafted = 0         # speculative accounting: proposed drafts
@@ -391,7 +398,10 @@ class ServeEngine:
 
         def tick(prm, pool, pending, live, keys, temp, topk):
             self.tick_traces += 1
+            from repro.kernels import dispatch
+            launches0 = dispatch.launch_count()
             logits, pool = rt.decode_fn(pending, pool, live, prm=prm)
+            self.tick_launches = dispatch.launch_count() - launches0
             ks = jax.vmap(jax.random.split)(keys)    # (B, 2, 2)
             nxt = sample_slots(logits, ks[:, 1], temperature=temp,
                                top_k=topk, vocab=self.vocab)
@@ -993,6 +1003,7 @@ class ServeEngine:
             "ticks": self.ticks,
             "gen_tokens": self._gen_tokens,
             "tick_traces": self.tick_traces,
+            "tick_launches": self.tick_launches,
             "prefill_traces": self.prefill_traces,
             "max_decode_stall_ticks": self._stall_max,
         }

@@ -12,9 +12,11 @@ paper's BN-LSTM/BN-GRU, RWKV6, Mamba2, and the attention families:
 
   * BN-LSTM/GRU — `bnlstm.RNNState` (stacked per-layer h/c).  The runtime
     builds the per-session decode tables ONCE (frozen-BN affines, the
-    dequantized+BN-folded layer-0 row table, gate-aligned packed codes) and
-    passes them into the jitted step, so a packed tree decodes through the
-    fused Pallas step kernel with no per-call re-preparation.
+    dequantized+BN-folded layer-0 row table, the stacked whole-tick kernel
+    artifact) and passes them into the jitted step, so a packed tree
+    decodes through ONE fused Pallas launch per tick with no per-call
+    re-preparation — or, on CPU, through dense fp tables (backend-honest
+    dispatch, kernels/dispatch.py).
   * transformer pool — the `T.init_caches` pytree.  For RWKV6 / Mamba2
     layers the cache slots hold `RWKVState` / `SSMState` and the decode step
     runs `wkv6_step` / `ssd_step`; attention layers hold KV caches in the
@@ -64,15 +66,24 @@ class RNNRuntime:
     spec_capable = True
 
     def __init__(self, cfg: BL.RNNConfig, variables: dict, *,
-                 interpret: Optional[bool] = None, dense_tables: bool = False):
+                 interpret: Optional[bool] = None,
+                 dense_tables: Optional[bool] = None):
+        from repro.kernels import dispatch
+
         self.cfg = cfg
         self.variables = variables
         self._interpret = interpret
-        self._dense_tables = dense_tables
-        # once per session: dequantized layer-0 rows, BN affines, gate codes
-        # (dense_tables additionally expands packed weights — see
-        # rnn_decode_tables; the speculative draft uses it on CPU)
-        self.tables = BL.rnn_decode_tables(variables, cfg, dense=dense_tables)
+        # dense_tables=None lets kernels/dispatch.py pick the backend-honest
+        # path: dense fp tables on CPU (no interpret-mode Pallas in serving),
+        # packed tables + the whole-tick fused kernel on tpu/gpu.  Parity
+        # tests opt into packed-on-CPU with dense_tables=False +
+        # interpret=True.
+        self._dense_tables = dispatch.prefer_dense(dense_tables)
+        # once per session: dequantized layer-0 rows, BN affines, and (when
+        # packed) the stacked whole-tick kernel artifact — see
+        # rnn_decode_tables
+        self.tables = BL.rnn_decode_tables(variables, cfg,
+                                           dense=self._dense_tables)
         def prefill_last(v, tb, toks, st):
             # take the last-token logits from the carried state through the
             # shared (B, 1, H) head (rnn_logits_last): XLA never
@@ -300,10 +311,10 @@ def speculative_draft(rt, mode: str = "ternary",
     prefill plans.
 
     `dense` (RNN drafts): expand the packed weights into dense decode
-    tables once per session.  Defaults to True on CPU, where the packed
-    Pallas kernels run in interpret mode (emulated — slower than the dense
-    math they replace) and the draft's job is raw step latency; on real
-    accelerators the default keeps the fused packed kernel."""
+    tables once per session.  None defers to the backend dispatch policy
+    (kernels/dispatch.py): dense on CPU, where the draft's job is raw step
+    latency and packed Pallas would only run emulated; on real accelerators
+    the draft keeps the whole-tick fused packed kernel."""
     import dataclasses
 
     from repro.core.qtensor import export_packed, is_qtensor
@@ -316,8 +327,6 @@ def speculative_draft(rt, mode: str = "ternary",
                 "speculative pairing packs the target's fp masters; this "
                 "runtime already serves a packed tree — build the pair "
                 "from the master weights instead")
-        if dense is None:
-            dense = jax.default_backend() == "cpu"
         dcfg = dataclasses.replace(
             rt.cfg, quant=QuantSpec(mode=mode, norm="batch"))
         packed = BL.export_packed_rnn(rt.variables["params"], dcfg)

@@ -88,7 +88,8 @@ def test_prefill_is_resumable():
 def test_fused_decode_step_matches_unfused(cell, mode):
     cfg = _rnn_cfg(cell, mode)
     qvar = _packed(_variables(cfg), cfg)
-    tables = BL.rnn_decode_tables(qvar, cfg)
+    # dense=False: explicit packed-tables opt-in (CPU would default dense)
+    tables = BL.rnn_decode_tables(qvar, cfg, dense=False)
     toks = jax.random.randint(jax.random.PRNGKey(4), (2, 6), 0, cfg.vocab)
     st = BL.rnn_state_init(cfg, 2)
     for i in range(6):
@@ -120,13 +121,17 @@ def test_decode_tables_layer0_rows_are_bn_folded():
     BN-affine-folded — the per-call dequantize is gone."""
     cfg = _rnn_cfg("lstm")
     qvar = _packed(_variables(cfg), cfg)
-    tables = BL.rnn_decode_tables(qvar, cfg)
+    tables = BL.rnn_decode_tables(qvar, cfg, dense=False)
     assert tables[0]["rows_bn"].shape == (cfg.vocab, 4 * cfg.d_hidden)
     assert "qx" not in tables[0]          # layer 0 never re-projects
-    assert "gate_codes" in tables[0]       # fused kernel artifact is cached
-    g = tables[0]["gate_codes"]
-    assert g.shape[0] == cfg.n_gates and g.dtype == jnp.uint32
-    assert g.shape[2] % 128 == 0           # gate boundaries tile-aligned
+    assert "tick" in tables[0]            # whole-tick kernel artifact cached
+    tick = tables[0]["tick"]
+    g = tick["codes_h"]
+    assert g.shape[:2] == (cfg.n_layers, cfg.n_gates)
+    assert g.dtype == jnp.uint32
+    assert g.shape[3] % 128 == 0           # gate boundaries tile-aligned
+    # arrays only: the artifact rides through jits as a pytree argument
+    assert all(hasattr(v, "dtype") for v in tick.values())
 
 
 # --- the one runtime interface across families -------------------------------
