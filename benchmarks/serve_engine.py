@@ -26,6 +26,18 @@ a full prefix re-prefill.  Rows whose pass/fail win condition was actually
 enforced carry `"asserted": true`; --quick runs record `"asserted": false`
 so the bench table cannot present unasserted wins as wins.
 
+The mesh section (`--mesh`, DESIGN.md §12) sweeps the data-sharded engine
+over D in {1, 2, 4, 8} under `XLA_FLAGS=--xla_force_host_platform_device_
+count=8` — each point a fresh subprocess, because the flag must be set
+before jax initializes, and the SAME forced-8 runtime hosts the D=1
+baseline so the comparison isolates sharding, not device-count plumbing.
+Each point drains the same workload through D× the slots and records
+aggregate tok/s plus scaling efficiency vs D=1.  Forced host "devices" are
+threads of ONE CPU core in this container, so quick mode records
+`asserted: false`; a full run on real parallel hardware asserts D=4 >= 2x.
+Mesh rows MERGE into serve_engine.json (replacing only prior mesh rows) so
+the sweep composes with the main benchmark's history.
+
 Numbers are CPU-container throughputs at reduced scale (backend-honest
 dispatch: packed weights serve through compiled dense-fallback tables on
 CPU, never interpret-mode Pallas — kernels/dispatch.py): they track
@@ -34,11 +46,15 @@ CPU, never interpret-mode Pallas — kernels/dispatch.py): they track
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import subprocess
+import sys
 
 import jax
 import numpy as np
 
-from benchmarks.common import write
+from benchmarks.common import RESULTS, write
 from repro.configs import get_config
 from repro.configs.rnn_paper import char_ptb, reduced
 from repro.core import bnlstm as BL
@@ -276,6 +292,99 @@ def _prefix_rows(quick: bool) -> list:
     }]
 
 
+def _mesh_point(d: int, quick: bool) -> dict:
+    """One sweep point, run INSIDE a forced-8-device subprocess: the
+    paper's packed-ternary LSTM on a data=d mesh (d=1: a plain meshless
+    engine on the same forced-8 runtime — the honest baseline), slots
+    scaled d-fold, draining one fixed workload."""
+    from repro.launch.mesh import make_serve_mesh
+    from repro.configs.rnn_paper import char_ptb, reduced
+
+    requests = 8 if quick else 24
+    prompt = 8
+    gen = 8 if quick else 16
+    slots = (2 if quick else 4) * d
+    trials = 1 if quick else 3
+
+    cfg = reduced(char_ptb())
+    cfg = dataclasses.replace(cfg, quant=QuantSpec(mode="ternary",
+                                                   norm="batch"))
+    var = BL.rnn_lm_init(jax.random.PRNGKey(0), cfg)
+    qvar = {"params": BL.export_packed_rnn(var["params"], cfg),
+            "state": var["state"]}
+    rt = serving_runtime(cfg, qvar)
+    eng = ServeEngine(rt, cfg.vocab, slots=slots, max_context=prompt + gen,
+                      prefill_chunk=8,
+                      mesh=None if d == 1 else make_serve_mesh(f"data={d}"))
+    reqs = synth_traffic(cfg.vocab, requests=requests, rate=1e9,
+                         prompt_len=prompt, gen=gen, temperature=0.8,
+                         top_k=8, seed=0)
+    eng.warm([np.asarray(r.prompt).size for r in reqs])
+    best = None
+    for _ in range(trials):
+        _, m = eng.run([dataclasses.replace(r) for r in reqs],
+                       realtime=False)
+        if best is None or m["agg_tok_s"] > best["agg_tok_s"]:
+            best = m
+    assert best["tick_traces"] == 1, "sharding retraced the tick"
+    return {"arch": "rnn-paper", "quant": "ternary", "mode": "mesh-drain",
+            "data_shards": d, "forced_devices": len(jax.devices()),
+            "slots": slots, "requests": best["requests"],
+            "gen_tokens": best["gen_tokens"],
+            "agg_tok_s": round(best["agg_tok_s"], 1),
+            "ticks": best["ticks"], "tick_traces": best["tick_traces"]}
+
+
+def mesh_rows(quick: bool = False) -> list:
+    """The D-sweep driver: one subprocess per point (XLA's forced device
+    count is fixed at jax init, so points cannot share a process), scaling
+    efficiency computed against the D=1 point, rows merged into
+    serve_engine.json in place of any previous mesh rows."""
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(here, "src"), env.get("PYTHONPATH", "")])
+    rows = []
+    for d in (1, 2, 4, 8):
+        cmd = [sys.executable, "-m", "benchmarks.serve_engine",
+               "--mesh-child", str(d)] + (["--quick"] if quick else [])
+        r = subprocess.run(cmd, env=env, cwd=here, capture_output=True,
+                           text=True)
+        if r.returncode != 0:
+            raise RuntimeError(f"mesh point data={d} failed:\n"
+                               + r.stdout[-2000:] + r.stderr[-2000:])
+        line = [l for l in r.stdout.splitlines()
+                if l.startswith("MESH-ROW ")][-1]
+        rows.append(json.loads(line[len("MESH-ROW "):]))
+        print(rows[-1])
+    base = rows[0]["agg_tok_s"]
+    for r in rows:
+        r["scaling_x"] = round(r["agg_tok_s"] / base, 2)
+        r["efficiency"] = round(r["scaling_x"] / r["data_shards"], 2)
+        r["asserted"] = not quick
+    if not quick:
+        d4 = next(r for r in rows if r["data_shards"] == 4)
+        assert d4["agg_tok_s"] >= 2 * base, (
+            f"data=4 drain {d4['agg_tok_s']} tok/s did not reach 2x the "
+            f"D=1 baseline {base} tok/s on the same workload")
+
+    path = RESULTS / "serve_engine.json"
+    payload = (json.loads(path.read_text()) if path.exists()
+               else {"meta": {}, "rows": []})
+    payload["rows"] = [r for r in payload["rows"]
+                       if r.get("mode") != "mesh-drain"] + rows
+    payload["meta"]["mesh_note"] = (
+        "mesh-drain rows: forced host devices are threads of one CPU core "
+        "in this container — efficiency measures scheduler/SPMD overhead "
+        "there, not parallel speedup; full mode on real devices asserts "
+        "data=4 >= 2x")
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(payload, indent=1, default=str))
+    return rows
+
+
 def serve_engine(quick: bool = False, spec_only: bool = False):
     if spec_only:
         return _spec_rows(quick)
@@ -334,6 +443,18 @@ if __name__ == "__main__":
     ap.add_argument("--spec", action="store_true",
                     help="run only the speculative-vs-plain drain comparison "
                          "(does not rewrite serve_engine.json)")
+    ap.add_argument("--mesh", action="store_true",
+                    help="sweep the data-sharded engine over D in {1,2,4,8} "
+                         "forced host devices; merges mesh rows into "
+                         "serve_engine.json without touching other rows")
+    ap.add_argument("--mesh-child", type=int, default=0, metavar="D",
+                    help=argparse.SUPPRESS)  # internal: one sweep point
     args = ap.parse_args()
-    for r in serve_engine(quick=args.quick, spec_only=args.spec):
-        print(r)
+    if args.mesh_child:
+        print("MESH-ROW " + json.dumps(_mesh_point(args.mesh_child,
+                                                   args.quick)))
+    elif args.mesh:
+        mesh_rows(quick=args.quick)
+    else:
+        for r in serve_engine(quick=args.quick, spec_only=args.spec):
+            print(r)

@@ -154,3 +154,41 @@ def assert_accumulation_only(fn, *args, **kwargs):
             f"{len(bad)} multiply op(s) in supposedly accumulation-only "
             f"path:\n  {lines}")
     return closed
+
+
+# ---------------------------------------------------------------------------
+# mesh-serving proofs and gates
+# ---------------------------------------------------------------------------
+
+_COLLECTIVES = ("all-reduce", "all-gather", "all-to-all",
+                "collective-permute", "reduce-scatter")
+
+
+def collective_ops(hlo_text: str) -> list:
+    """Collective-communication ops named in compiled HLO text.
+
+    The third proof utility (after the launch counter and mul-freeness):
+    the mesh serving tests compile the data-sharded decode tick and assert
+    this returns [] — every op of the tick is shard-local, so adding slot
+    shards never adds wire traffic (DESIGN.md §12).  Tensor-parallel ticks
+    legitimately contain reductions and are NOT asserted collective-free.
+    """
+    low = hlo_text.lower()
+    return [c for c in _COLLECTIVES if c in low]
+
+
+def packed_pallas_active(tree) -> bool:
+    """True when serving `tree` on this backend would dispatch the packed
+    Pallas kernels (QTensor leaves present and the backend runs Pallas).
+
+    A mesh-sharded engine must refuse that combination today: pallas_call
+    is a single-device launch, so running it over a sharded slot pool or
+    sharded codes needs a shard_map port (ROADMAP).  On CPU the same tree
+    serves through the compiled dense fallback, whose dequantize + dot
+    partition cleanly under SPMD — which is what makes the whole mesh
+    story CI-provable on host devices."""
+    from repro.core.qtensor import is_qtensor
+    if not use_pallas(None):
+        return False
+    return any(is_qtensor(l) for l in
+               jax.tree_util.tree_leaves(tree, is_leaf=is_qtensor))

@@ -100,6 +100,18 @@ def qmatmul(x: Array, w, *, interpret: Optional[bool] = None) -> Array:
 
     Output dtype follows x (the activation compute dtype); the packed kernel
     accumulates in fp32 either way.
+
+    Sharded codes (mesh serving): the dense-fallback branch accepts SPMD-
+    sharded QTensors as-is.  Column-parallel codes (last axis on 'model')
+    flow through `dequantize` untouched — its unpack reshapes only the
+    packed-row axis, so the column sharding propagates to the dense weight
+    and the dot computes each output shard locally (xW sharded exactly like
+    a dense column-parallel matmul).  Row-parallel codes partition the
+    contraction dim and the dot's psum does the rest; `serve_param_shardings`
+    only emits that layout when the shard boundary cannot fall inside a pack
+    word or the dequantize pad-slice (`qtensor_pspecs`).  The Pallas branch
+    is a single-device launch and must NOT see sharded operands — mesh
+    engines gate on `dispatch.packed_pallas_active` before construction.
     """
     if not isinstance(w, QTensor):
         return x @ w

@@ -132,12 +132,25 @@ def synth_traffic(vocab: int, *, requests: int, rate: float, prompt_len: int,
     return reqs
 
 
+def _serve_mesh(args):
+    """Resolve --mesh into a Mesh (None when unset) and announce it."""
+    if not getattr(args, "mesh", ""):
+        return None
+    from repro.launch.mesh import make_serve_mesh
+    mesh = make_serve_mesh(args.mesh)
+    shape = ",".join(f"{a}={n}" for a, n in mesh.shape.items())
+    print(f"mesh: {shape} over {mesh.size} device(s) — slot pool sharded "
+          f"along 'data', weights tensor-parallel along 'model'")
+    return mesh
+
+
 def run_traffic(cfg, rt, args, draft=None) -> dict:
     """Replay a Poisson workload through the continuous-batching engine."""
     ctx = args.prompt_len + args.gen
     eng = ServeEngine(rt, cfg.vocab, slots=args.slots, max_context=ctx,
                       prefill_chunk=args.prefill_chunk,
-                      draft=draft, spec_k=args.spec_k if draft else 0)
+                      draft=draft, spec_k=args.spec_k if draft else 0,
+                      mesh=_serve_mesh(args))
     reqs = synth_traffic(cfg.vocab, requests=args.requests, rate=args.rate,
                          prompt_len=args.prompt_len, gen=args.gen,
                          temperature=args.temperature, top_k=args.top_k,
@@ -196,7 +209,7 @@ def run_listen(cfg, rt, args, draft=None) -> None:
     eng = ServeEngine(rt, cfg.vocab, slots=args.slots, max_context=ctx,
                       prefill_chunk=args.prefill_chunk,
                       draft=draft, spec_k=args.spec_k if draft else 0,
-                      prefix_cache=cache)
+                      prefix_cache=cache, mesh=_serve_mesh(args))
     eng.warm([args.prompt_len])
 
     async def _serve():
@@ -260,10 +273,19 @@ def main(argv=None):
                     help="prefix-state cache byte budget for --listen "
                          "(0 = off); repeated system prompts resume from "
                          "a spliced state row instead of re-prefilling")
+    ap.add_argument("--mesh", default="",
+                    help="serve on a device mesh, e.g. 'data=4,model=2': "
+                         "slot pool sharded D-way along 'data' (slots must "
+                         "divide D), weights tensor-parallel along 'model' "
+                         "(DESIGN.md §12); on CPU run under XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
     args = ap.parse_args(argv)
 
     if args.spec_k and not (args.traffic or args.listen):
         raise SystemExit("--spec-k is a continuous-batching engine mode; "
+                         "run it with --traffic or --listen")
+    if args.mesh and not (args.traffic or args.listen):
+        raise SystemExit("--mesh shards the continuous-batching engine; "
                          "run it with --traffic or --listen")
     key = jax.random.PRNGKey(args.seed)
     build = _build_rnn if args.arch in RNN_ARCH_IDS else _build_transformer

@@ -9,15 +9,18 @@ every (arch x mesh) cell.
 """
 from __future__ import annotations
 
+import dataclasses
+import math
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.qtensor import is_qtensor
 from repro.models.mamba2 import SSMState
 from repro.models.rwkv6 import RWKVState
-from repro.serve.kvcache import AttnCache, CrossCache, kv_pspec
+from repro.serve.kvcache import AttnCache, CrossCache, kv_pspec, slot_axis
 from repro.runtime import use_mesh
 
 # row-parallel (input dim on 'model'): projections whose input is the
@@ -110,10 +113,58 @@ def compute_param_pspec(path, leaf, mesh: Mesh) -> P:
     return _drop(param_pspec(path, leaf, mesh))
 
 
+def qtensor_pspecs(spec: P, q, mesh: Mesh):
+    """Project a dense-layout spec for QTensor `q`'s LOGICAL shape (..., K, N)
+    onto its packed codes (..., ceil(K/G), N).
+
+    The output-column axis carries over unchanged — packing preserves the
+    column count, so column-parallel QTensors shard exactly like their dense
+    masters.  The contraction axis keeps its entry only when the PACKED row
+    count still divides the mesh axes AND packing needed no pad rows (K a
+    multiple of the pack group) — otherwise a shard boundary would fall
+    inside a pack word, or inside dequantize's pad-slice, and XLA would
+    reshard the codes on first use.  Leading (stack / expert) entries carry
+    over unchanged.  Returns (codes_spec, scale_spec); a per-output-channel
+    scale follows the column entry.
+    """
+    nd = q.codes.ndim
+    entries = list(tuple(spec)) + [None] * (nd - len(tuple(spec)))
+    entries = entries[:nd]
+    k_ax = nd - 2
+    ke = entries[k_ax]
+    if ke is not None:
+        axes = ke if isinstance(ke, tuple) else (ke,)
+        parts = math.prod(mesh.shape.get(a, 1) for a in axes)
+        padded = q.codes.shape[k_ax] * q.group != q.k
+        if padded or parts < 2 or q.codes.shape[k_ax] % parts:
+            entries[k_ax] = None
+    codes_spec = P(*entries)
+    scale_spec = None
+    if q.scale is not None:
+        ce = entries[-1] if q.scale.shape[-1] == q.codes.shape[-1] else None
+        scale_spec = P(*([None] * (q.scale.ndim - 1)), ce)
+    return codes_spec, scale_spec
+
+
 def serve_param_shardings(params: Any, mesh: Mesh) -> Any:
-    return jax.tree_util.tree_map_with_path(
-        lambda path, leaf: NamedSharding(mesh, serve_param_pspec(path, leaf, mesh)),
-        params)
+    """QTensor-aware serving shardings.  Packed leaves report their logical
+    (..., K, N) via QTensor.shape, so the name-based rules apply unchanged;
+    the resulting dense spec is then projected onto codes/scale.  The return
+    leaf for a packed weight is a QTensor whose children are NamedShardings —
+    the same treedef as the value tree, which is what jax.device_put and
+    jit in_shardings expect for a registered dataclass."""
+
+    def one(path, leaf):
+        spec = serve_param_pspec(path, leaf, mesh)
+        if not is_qtensor(leaf):
+            return NamedSharding(mesh, spec)
+        cs, ss = qtensor_pspecs(spec, leaf, mesh)
+        return dataclasses.replace(
+            leaf,
+            codes=NamedSharding(mesh, cs),
+            scale=None if ss is None else NamedSharding(mesh, ss))
+
+    return jax.tree_util.tree_map_with_path(one, params, is_leaf=is_qtensor)
 
 
 def state_shardings(state: Any, mesh: Mesh) -> Any:
@@ -200,3 +251,41 @@ def cache_shardings(caches: Any, mesh: Mesh) -> Any:
     return jax.tree.map(node, caches,
                         is_leaf=lambda x: isinstance(
                             x, (AttnCache, CrossCache, SSMState, RWKVState)))
+
+
+def serve_pool_shardings(pool: Any, ref: Any, mesh: Mesh) -> Any:
+    """NamedShardings for a ServeEngine slot pool.
+
+    The slot axis of every leaf — recovered against the batch-1 `ref`
+    template exactly the way the engine's slot surgery does — shards over
+    the data axes, so slot s lives on data shard ``s // (slots / D)``
+    (NamedSharding splits an axis into equal contiguous blocks in mesh-axis
+    order).  AttnCache K/V additionally shard their KV-heads axis over
+    'model' when divisible, mirroring ``kv_pspec``'s preferred layout;
+    recurrent state (RNN h/c, SSM, RWKV) keeps its feature axes local so
+    the elementwise gate math stays shard-local.  Leaves without a slot
+    axis (shared scalars) replicate.
+    """
+
+    def leaf_sh(p, r, extra=()):
+        ax = slot_axis(p.shape, r.shape)
+        spec = [None] * len(p.shape)
+        if ax is not None:
+            spec[ax] = _bd(mesh, p.shape[ax])
+        for a, m_ax in extra:
+            if a is not None and a < len(p.shape) and spec[a] is None:
+                spec[a] = _fit(p.shape[a], m_ax, mesh)
+        return NamedSharding(mesh, P(*spec))
+
+    def node(p, r):
+        if isinstance(p, (AttnCache, CrossCache)):
+            ax = slot_axis(p.k.shape, r.k.shape)
+            heads = None if ax is None else ax + 2  # (.., B, C, H, hd)
+            kv = leaf_sh(p.k, r.k, extra=((heads, "model"),))
+            if isinstance(p, CrossCache):
+                return CrossCache(k=kv, v=kv)
+            return AttnCache(k=kv, v=kv, pos=leaf_sh(p.pos, r.pos), ring=p.ring)
+        return leaf_sh(p, r)
+
+    return jax.tree.map(node, pool, ref,
+                        is_leaf=lambda x: isinstance(x, (AttnCache, CrossCache)))

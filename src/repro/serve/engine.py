@@ -244,7 +244,14 @@ class ServeEngine:
     eng = ServeEngine(rt, vocab, slots=8, max_context=512,
                       draft=speculative_draft(rt), spec_k=4)
 
-    Invariants (DESIGN.md §7-§10):
+    Mesh mode (DESIGN.md §12) scales the same engine across devices —
+    slot pool data-parallel (N× slots, one tick per mesh), weights
+    tensor-parallel per the runtime's serving rules:
+
+    eng = ServeEngine(rt, vocab, slots=32, max_context=512,
+                      mesh=make_serve_mesh("data=4,model=2"))
+
+    Invariants (DESIGN.md §7-§10, §12):
       * mask-don't-reshape — the pool state, the token/key/temperature
         arrays and therefore the jitted tick keep shape (B, ...) forever;
         occupancy lives in a boolean mask;
@@ -268,7 +275,7 @@ class ServeEngine:
 
     def __init__(self, rt, vocab: int, *, slots: int, max_context: int,
                  eos_id: Optional[int] = None, prefill_chunk: int = 32,
-                 draft=None, spec_k: int = 0, prefix_cache=None):
+                 draft=None, spec_k: int = 0, prefix_cache=None, mesh=None):
         if slots < 1:
             raise ValueError("need at least one slot")
         if prefill_chunk < 1:
@@ -396,6 +403,74 @@ class ServeEngine:
         self._stall_pending: Dict[int, int] = {}
         self._stall_max = 0
 
+        # -- mesh placement (DESIGN.md §12) ---------------------------------
+        # A mesh-native engine shards the slot pool over the mesh's data
+        # axes (slot s lives on shard s // (slots/D)) and the weights
+        # tensor-parallel over 'model' per the runtime's serving rules,
+        # then pins every jitted region's in/out shardings so the layouts
+        # are part of the ONE trace — admit/retire/splice between ticks
+        # can never force a reshard, and tick_traces==1 holds per mesh
+        # exactly as it does per device.
+        self.mesh = mesh
+        self._data_shards = 1
+        self._pool_sh = self._dpool_sh = None
+        self._sub_sh = self._dsub_sh = None
+        self._prm_sh = self._dprm_sh = None
+        self._vec_sh = self._row_sh = self._rep = None
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.kernels import dispatch
+            from repro.launch.sharding import (batch_shardings,
+                                               serve_pool_shardings)
+            if dispatch.packed_pallas_active(
+                    (self._prm, self._dprm if self.spec else None)):
+                raise NotImplementedError(
+                    "mesh-sharded serving of packed trees runs through the "
+                    "compiled dense fallback (CPU) — the packed Pallas "
+                    "kernels are single-device launches; their shard_map "
+                    "port is the ROADMAP item")
+            daxes = [a for a in ("pod", "data") if mesh.shape.get(a, 1) > 1]
+            D = int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+            if self.n_slots % D:
+                raise ValueError(
+                    f"slots={self.n_slots} must split evenly over the "
+                    f"mesh's {D} data shard(s) — the slot pool shards "
+                    f"along 'data'")
+            self._data_shards = D
+            self._rep = NamedSharding(mesh, P())
+            self._vec_sh, self._row_sh = batch_shardings(
+                (self._pending, self._keys), mesh)
+            self._pool_sh = serve_pool_shardings(self.pool, self._ref, mesh)
+            self._sub_sh = jax.tree.map(lambda _: self._rep, self._pool_sh)
+            self._prm_sh = rt.serve_prm_shardings(mesh)
+            self.pool = jax.device_put(self.pool, self._pool_sh)
+            self._prm = jax.device_put(self._prm, self._prm_sh)
+            self._pending = jax.device_put(self._pending, self._vec_sh)
+            self._live = jax.device_put(self._live, self._vec_sh)
+            self._keys = jax.device_put(self._keys, self._row_sh)
+            self._temp = jax.device_put(self._temp, self._vec_sh)
+            self._topk = jax.device_put(self._topk, self._vec_sh)
+            if self.spec:
+                self._dpool_sh = serve_pool_shardings(
+                    self.draft_pool, self._dref, mesh)
+                self._dsub_sh = jax.tree.map(lambda _: self._rep,
+                                             self._dpool_sh)
+                self._dprm_sh = draft.serve_prm_shardings(mesh)
+                self.draft_pool = jax.device_put(self.draft_pool,
+                                                 self._dpool_sh)
+                self._dprm = jax.device_put(self._dprm, self._dprm_sh)
+
+        def _mjit(fn, in_sh=None, out_sh=None, donate=()):
+            # sharding-annotated jit for the mesh-native engine; the
+            # mesh=None engine compiles exactly as before.  Pinning BOTH
+            # sides means host-built operands (chunk tokens, slot indices,
+            # reset masks, fresh PRNG keys) are placed on entry and every
+            # result lands already laid out for the next region.
+            if mesh is None:
+                return jax.jit(fn, donate_argnums=donate)
+            return jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                           donate_argnums=donate)
+
         def tick(prm, pool, pending, live, keys, temp, topk):
             self.tick_traces += 1
             from repro.kernels import dispatch
@@ -417,7 +492,12 @@ class ServeEngine:
         # donation with a warning, so only ask off-CPU.  The prm tree is
         # NEVER donated: the same arrays are passed every call.
         cpu = jax.default_backend() == "cpu"
-        self._tick = jax.jit(tick, donate_argnums=() if cpu else (1, 2, 4))
+        self._tick = _mjit(
+            tick,
+            in_sh=(self._prm_sh, self._pool_sh, self._vec_sh, self._vec_sh,
+                   self._row_sh, self._vec_sh, self._vec_sh),
+            out_sh=(self._pool_sh, self._vec_sh, self._row_sh),
+            donate=() if cpu else (1, 2, 4))
 
         def admit_commit(logits, key, t, k, pending, keys, temp, topk, live,
                          slot):
@@ -433,7 +513,13 @@ class ServeEngine:
                     temp.at[slot].set(t), topk.at[slot].set(k),
                     live.at[slot].set(True))
 
-        self._admit_commit = jax.jit(admit_commit)
+        R = self._rep
+        self._admit_commit = _mjit(
+            admit_commit,
+            in_sh=(R, R, R, R, self._vec_sh, self._row_sh, self._vec_sh,
+                   self._vec_sh, self._vec_sh, R),
+            out_sh=(R, self._vec_sh, self._row_sh, self._vec_sh,
+                    self._vec_sh, self._vec_sh))
 
         write = rt.write_slots if hasattr(rt, "write_slots") else tree_write_slot
 
@@ -446,32 +532,39 @@ class ServeEngine:
             logits, sub = rt.prefill_chunk(tokens, sub, n, prm=prm)
             return logits, write(pool, sub, slot)
 
-        self._prefill_slot = jax.jit(
-            prefill_slot, donate_argnums=() if cpu else (1,))
+        self._prefill_slot = _mjit(
+            prefill_slot,
+            in_sh=(self._prm_sh, self._pool_sh, R, R, R),
+            out_sh=(R, self._pool_sh),
+            donate=() if cpu else (1,))
         # retire-time slot scrub, shape-aware: recurrent leaves + positions
         # to zero, attention KV masked in place, the device live bit
         # cleared — the freed row must read as fresh because the next
         # prefill resumes from it
-        self._reset = jax.jit(
+        self._reset = _mjit(
             lambda pool, live, mask: (
                 tree_reset_slots(pool, self._ref, mask),
                 jnp.where(mask, False, live)),
-            donate_argnums=() if cpu else (0,))
+            in_sh=(self._pool_sh, self._vec_sh, self._vec_sh),
+            out_sh=(self._pool_sh, self._vec_sh),
+            donate=() if cpu else (0,))
 
         if self.prefix_cache is not None:
             # prefix-cache device paths.  The splice is the SAME full-row
             # write admission prefill uses (entries are widened to the pool
             # row shape outside jit), so it traces exactly once; the gather
             # reads the slot row for snapshotting without donating the pool.
-            self._gather = jax.jit(
-                lambda pool, slot: tree_gather_slot(pool, self._ref, slot))
+            self._gather = _mjit(
+                lambda pool, slot: tree_gather_slot(pool, self._ref, slot),
+                in_sh=(self._pool_sh, R), out_sh=self._sub_sh)
 
             def splice(pool, sub, slot):
                 self.splice_traces += 1
                 return write(pool, sub, slot)
 
-            self._splice = jax.jit(
-                splice, donate_argnums=() if cpu else (0,))
+            self._splice = _mjit(
+                splice, in_sh=(self._pool_sh, self._sub_sh, R),
+                out_sh=self._pool_sh, donate=() if cpu else (0,))
 
         if not self.spec:
             return
@@ -548,8 +641,14 @@ class ServeEngine:
             packed = jnp.concatenate([out, n_acc[:, None]], axis=1)
             return pool, dpool, pending, new_keys, packed
 
-        self._spec_tick = jax.jit(
-            spec_tick, donate_argnums=() if cpu else (2, 3, 4, 6))
+        self._spec_tick = _mjit(
+            spec_tick,
+            in_sh=(self._prm_sh, self._dprm_sh, self._pool_sh,
+                   self._dpool_sh, self._vec_sh, self._vec_sh, self._row_sh,
+                   self._vec_sh, self._vec_sh),
+            out_sh=(self._pool_sh, self._dpool_sh, self._vec_sh,
+                    self._row_sh, self._row_sh),
+            donate=() if cpu else (2, 3, 4, 6))
 
         dwrite = (draft.write_slots if hasattr(draft, "write_slots")
                   else tree_write_slot)
@@ -567,24 +666,33 @@ class ServeEngine:
             return (logits, write(pool, sub, slot),
                     dwrite(dpool, dsub, slot))
 
-        self._spec_prefill_slot = jax.jit(
-            spec_prefill_slot, donate_argnums=() if cpu else (2, 3))
-        self._spec_reset = jax.jit(
+        self._spec_prefill_slot = _mjit(
+            spec_prefill_slot,
+            in_sh=(self._prm_sh, self._dprm_sh, self._pool_sh,
+                   self._dpool_sh, R, R, R),
+            out_sh=(R, self._pool_sh, self._dpool_sh),
+            donate=() if cpu else (2, 3))
+        self._spec_reset = _mjit(
             lambda pool, dpool, live, mask: (
                 tree_reset_slots(pool, self._ref, mask),
                 tree_reset_slots(dpool, self._dref, mask),
                 jnp.where(mask, False, live)),
-            donate_argnums=() if cpu else (0, 1))
+            in_sh=(self._pool_sh, self._dpool_sh, self._vec_sh,
+                   self._vec_sh),
+            out_sh=(self._pool_sh, self._dpool_sh, self._vec_sh),
+            donate=() if cpu else (0, 1))
 
         if self.prefix_cache is not None:
-            self._dgather = jax.jit(
-                lambda pool, slot: tree_gather_slot(pool, self._dref, slot))
+            self._dgather = _mjit(
+                lambda pool, slot: tree_gather_slot(pool, self._dref, slot),
+                in_sh=(self._dpool_sh, R), out_sh=self._dsub_sh)
 
             def dsplice(dpool, dsub, slot):
                 return dwrite(dpool, dsub, slot)
 
-            self._dsplice = jax.jit(
-                dsplice, donate_argnums=() if cpu else (0,))
+            self._dsplice = _mjit(
+                dsplice, in_sh=(self._dpool_sh, self._dsub_sh, R),
+                out_sh=self._dpool_sh, donate=() if cpu else (0,))
 
     # -- clock --------------------------------------------------------------
 
@@ -677,8 +785,20 @@ class ServeEngine:
     def _free_slot(self) -> Optional[int]:
         # a slot is busy while PREFILLING too (live only after its first
         # token), so occupancy is "has an _Active", not the decode mask
-        idle = np.flatnonzero(np.array([a is None for a in self._active]))
-        return int(idle[0]) if idle.size else None
+        busy = np.array([a is not None for a in self._active])
+        idle = np.flatnonzero(~busy)
+        if not idle.size:
+            return None
+        if self._data_shards <= 1:
+            return int(idle[0])
+        # mesh: spread admissions over the data shards (slot s lives on
+        # shard s // per — contiguous blocks, see serve_pool_shardings)
+        # so a half-empty pool decodes on D shards instead of piling onto
+        # shard 0.  Slot choice never affects a request's bytes (the §7
+        # per-request determinism invariant), so balancing is free.
+        per = self.n_slots // self._data_shards
+        occ = busy.reshape(self._data_shards, per).sum(axis=1)
+        return int(min(idle, key=lambda s: (occ[s // per], int(s))))
 
     # -- the resumable scheduling API (DESIGN.md §10) -----------------------
 
@@ -1007,6 +1127,20 @@ class ServeEngine:
             "prefill_traces": self.prefill_traces,
             "max_decode_stall_ticks": self._stall_max,
         }
+        # per-shard occupancy (queue depth is global — admission is one
+        # priority heap feeding every shard): a router in front of a mesh
+        # fleet reads this to spot an unbalanced mesh.  A mesh=None engine
+        # is one shard, so the schema is unconditional.
+        per = self.n_slots // self._data_shards
+        busy = [a is not None for a in self._active]
+        d["queue_depth"] = d["queued"]
+        d["shards"] = [
+            {"shard": i, "slots": per,
+             "active": int(sum(busy[i * per:(i + 1) * per])),
+             "occupancy": sum(busy[i * per:(i + 1) * per]) / per}
+            for i in range(self._data_shards)]
+        if self.mesh is not None:
+            d["mesh"] = {str(a): int(n) for a, n in self.mesh.shape.items()}
         if self.spec:
             d.update({"spec_traces": self.spec_traces,
                       "drafted_tokens": self._drafted,
@@ -1015,6 +1149,30 @@ class ServeEngine:
             d["splice_traces"] = self.splice_traces
             d["prefix_cache"] = self.prefix_cache.stats()
         return d
+
+    def tick_hlo(self) -> str:
+        """Compiled HLO of the decode tick over the engine's CURRENT
+        operands — the mesh tests grep it with `dispatch.collective_ops`
+        to prove the data-sharded tick is communication-free.  Lowering
+        re-runs the trace outside the serving path, so the trace/launch
+        counters are saved and restored: tick_traces stays a property of
+        the SERVING path, not of diagnostics."""
+        t, l = self.tick_traces, self.tick_launches
+        s = self.spec_traces
+        try:
+            if self.spec:
+                low = self._spec_tick.lower(
+                    self._prm, self._dprm, self.pool, self.draft_pool,
+                    self._pending, self._live, self._keys, self._temp,
+                    self._topk)
+            else:
+                low = self._tick.lower(
+                    self._prm, self.pool, self._pending, self._live,
+                    self._keys, self._temp, self._topk)
+            return low.compile().as_text()
+        finally:
+            self.tick_traces, self.tick_launches = t, l
+            self.spec_traces = s
 
     # -- the batch driver ---------------------------------------------------
 

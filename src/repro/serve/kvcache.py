@@ -119,7 +119,16 @@ def _update_per_slot(c: AttnCache, k_new: Array, v_new: Array,
     `live` (B,) bool freezes dead rows bit-for-bit: their pos stays put and
     their scatter re-writes the bytes already in place.  With in-slot
     chunked prefill a dead row can be MID-PREFILL, so a zombie append is no
-    longer harmless — it must not move the row's pos or bytes."""
+    longer harmless — it must not move the row's pos or bytes.
+
+    The row-at-own-depth write is expressed as a VMAPPED per-row scatter,
+    not `.at[rows, slot]` with concatenated (row, col) index pairs: vmap
+    lowers to a scatter whose batch dim is explicit, which XLA's SPMD
+    partitioner recognizes as index-parallel — under a slot-sharded pool
+    (mesh serving, DESIGN.md §12) each shard scatters its own rows locally.
+    The concatenated form defeats that analysis and inserts an all-gather +
+    all-reduce around every layer's cache write; same values, same bytes,
+    very different wire traffic."""
     cap = c.k.shape[1]
     S = k_new.shape[1]
     if c.ring and S > cap:  # keep only the in-window tail
@@ -128,15 +137,16 @@ def _update_per_slot(c: AttnCache, k_new: Array, v_new: Array,
         S = cap
     abs_pos = c.pos[:, None] + jnp.arange(S, dtype=jnp.int32)  # (B, S)
     slot = jnp.mod(abs_pos, cap) if c.ring else jnp.clip(abs_pos, 0, cap - 1)
-    rows = jnp.arange(c.k.shape[0], dtype=jnp.int32)[:, None]
     step = S
     if live is not None:
+        take = jax.vmap(lambda buf, s: buf[s])
         m = live[:, None, None, None]
-        k_new = jnp.where(m, k_new, c.k[rows, slot])
-        v_new = jnp.where(m, v_new, c.v[rows, slot])
+        k_new = jnp.where(m, k_new, take(c.k, slot))
+        v_new = jnp.where(m, v_new, take(c.v, slot))
         step = S * live.astype(c.pos.dtype)
-    k = c.k.at[rows, slot].set(k_new)
-    v = c.v.at[rows, slot].set(v_new)
+    put = jax.vmap(lambda buf, s, new: buf.at[s].set(new))
+    k = put(c.k, slot, k_new)
+    v = put(c.v, slot, v_new)
     return constrain_cache(AttnCache(k=k, v=v, pos=c.pos + step, ring=c.ring))
 
 
@@ -186,9 +196,15 @@ def cache_bytes(c: AttnCache) -> int:
 # ---------------------------------------------------------------------------
 
 
-def _slot_axis(pool_shape, sub_shape) -> Optional[int]:
+def slot_axis(pool_shape, sub_shape) -> Optional[int]:
     """The axis where a batch-1 sub-state differs from the pool: that is
-    the slot axis.  Equal shapes mean a 1-slot pool (whole replace)."""
+    the slot axis.  Equal shapes mean a 1-slot pool (whole replace).
+
+    Public because the mesh serving layer keys off the same recovery:
+    `launch.sharding.serve_pool_shardings` shards exactly this axis over
+    the mesh's data axes, which is what keeps every per-slot scatter below
+    (`write_row` / `read_row` — dynamic index on the slot axis only)
+    index-parallel under SPMD instead of forcing a replication reshard."""
     if tuple(pool_shape) == tuple(sub_shape):
         return None
     for i, (p, s) in enumerate(zip(pool_shape, sub_shape)):
@@ -198,6 +214,9 @@ def _slot_axis(pool_shape, sub_shape) -> Optional[int]:
                                  f"{sub_shape} vs pool {pool_shape}")
             return i
     raise ValueError(f"no slot axis between {pool_shape} and {sub_shape}")
+
+
+_slot_axis = slot_axis  # back-compat internal alias
 
 
 def write_row(p: Array, s: Array, slot) -> Array:
@@ -333,9 +352,11 @@ def cache_spec_snapshot(c: AttnCache, span: int) -> SpecSnap:
                          "(a ring write recycles in-window history)")
 
     def one(k, v, pos):
-        rows = jnp.arange(k.shape[0], dtype=jnp.int32)[:, None]
+        # vmapped per-row gather (not [rows, slot] concat-index pairs) so
+        # the slot-sharded pool reads stay shard-local — see _update_per_slot
         slot = _span_slots(pos, span, k.shape[1])
-        return k[rows, slot], v[rows, slot]
+        take = jax.vmap(lambda buf, s: buf[s])
+        return take(k, slot), take(v, slot)
 
     if c.pos.ndim == 2:
         ks, vs = jax.vmap(one)(c.k, c.v, c.pos)
@@ -356,11 +377,14 @@ def cache_spec_commit(c: AttnCache, snap: SpecSnap, keep: Array) -> AttnCache:
     span = snap.k.shape[-3]
 
     def one(k, v, pos, sk, sv):
-        rows = jnp.arange(k.shape[0], dtype=jnp.int32)[:, None]
+        # vmapped per-row gather+scatter, shard-local under a slot-sharded
+        # pool — see _update_per_slot
         slot = _span_slots(pos, span, k.shape[1])
+        take = jax.vmap(lambda buf, s: buf[s])
+        put = jax.vmap(lambda buf, s, new: buf.at[s].set(new))
         m = (jnp.arange(span) < keep[:, None])[..., None, None]
-        k = k.at[rows, slot].set(jnp.where(m, k[rows, slot], sk))
-        v = v.at[rows, slot].set(jnp.where(m, v[rows, slot], sv))
+        k = put(k, slot, jnp.where(m, take(k, slot), sk))
+        v = put(v, slot, jnp.where(m, take(v, slot), sv))
         return k, v
 
     if c.pos.ndim == 2:

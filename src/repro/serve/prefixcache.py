@@ -27,6 +27,13 @@ ids it was built from, and a lookup whose hash matches but whose ids differ
 is rejected (counted in `collisions`) — the splice never trusts the digest
 alone.  Eviction is LRU under a byte budget measured on the narrowed
 on-device entries (target + draft state for speculative engines).
+
+Mesh engines (DESIGN.md §12) share this cache unchanged: entries are
+batch-1 states gathered through the engine's `_gather`, whose mesh
+out-shardings REPLICATE the row, so a cached entry is placement-agnostic —
+one cache can feed engines on different meshes, and the splice's pinned
+in/out shardings put the widened row back on the slot's data shard without
+retracing (splice_traces stays 1).
 """
 from __future__ import annotations
 

@@ -118,6 +118,19 @@ class RNNRuntime:
         `drive_session` jits and makes logits-level comparisons unsound."""
         return (self.variables, self.tables)
 
+    def serve_prm_shardings(self, mesh):
+        """Mesh placement of `jit_prm` for a sharded ServeEngine: fully
+        REPLICATED.  The fused (H, 4H) gate weight cannot column-shard over
+        'model' without splitting the i/f/g/o gates across shards (the
+        `split(4)` boundary lands mid-axis), which would turn the f*c + i*g
+        elementwise math into cross-shard traffic — and at paper scale the
+        packed LSTM is a few hundred KB, so replication is the right call.
+        Data-sharding of the slot pool is untouched by this: rows of the
+        tick read replicated weights shard-locally."""
+        from jax.sharding import NamedSharding, PartitionSpec
+        rep = NamedSharding(mesh, PartitionSpec())
+        return jax.tree.map(lambda _: rep, self.jit_prm)
+
     def decode_fn(self, tok: Array, state: BL.RNNState,
                   live: Optional[Array] = None, prm=None):
         """Unjitted decode body for callers that jit a larger region (the
@@ -230,6 +243,17 @@ class TransformerRuntime:
         """The param tree a caller's own jit must thread as an argument (see
         RNNRuntime.jit_prm — same constant-folding rationale)."""
         return self.params
+
+    def serve_prm_shardings(self, mesh):
+        """Mesh placement of `jit_prm` for a sharded ServeEngine: the
+        name-based serving rules (tensor-parallel over 'model', no FSDP
+        axis), with packed QTensor leaves projected onto their codes —
+        column-parallel Wq/Wk/Wv/Wup shard the codes' output-column axis
+        directly, row-parallel Wo/Wdown shard the packed rows when the pack
+        group divides cleanly.  This is how the large configs serve at
+        size: each model shard holds 1/M of every weight's codes."""
+        from repro.launch.sharding import serve_param_shardings
+        return serve_param_shardings(self.params, mesh)
 
     def decode_fn(self, tok: Array, state, live: Optional[Array] = None,
                   prm=None):

@@ -357,3 +357,29 @@ def test_http_bad_requests_are_rejected():
     assert b"400 Bad Request" in resp and b"max_tokens" in resp
     assert "error" in nf
     assert not eng.has_work()
+
+
+def test_stats_report_per_shard_occupancy_and_queue_depth():
+    """`stats()` / `/v1/stats` carry the mesh-serving observability fields
+    on EVERY engine (DESIGN.md §12): a `shards` list (one row per data
+    shard; a single-device engine is one shard spanning all slots) whose
+    `active` sums to the engine's, plus `queue_depth` for the admission
+    queue — so dashboards need no schema fork when --mesh lands."""
+    rt, vocab, _ = _runtime("lstm-packed")
+    eng = _engine("lstm-packed", 2, 4)
+    for r in _reqs(vocab, 3, seed=91):   # 3 requests, 2 slots -> 1 queued
+        eng.submit(r)
+    eng.step()
+    mid = eng.stats()
+    assert mid["queue_depth"] == mid["queued"] == 1
+    assert [s["shard"] for s in mid["shards"]] == [0]
+    assert mid["shards"][0]["slots"] == 2
+    assert sum(s["active"] for s in mid["shards"]) == mid["active"] == 2
+    assert mid["shards"][0]["occupancy"] == 1.0
+    assert "mesh" not in mid             # meshless engine: no mesh block
+    _drain(eng)
+
+    stats = _sse_roundtrip(eng, [])[1]   # same fields over HTTP
+    assert stats["queue_depth"] == 0
+    assert stats["shards"][0]["active"] == 0
+    assert stats["shards"][0]["occupancy"] == 0.0

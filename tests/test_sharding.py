@@ -120,3 +120,59 @@ def test_cache_shardings_cover_every_arch_decode():
             lambda: T.init_caches(cfg, 4, ctx, src_len=src))
         out = cache_shardings(caches, mesh)  # must not raise
         assert jax.tree.structure(out, is_leaf=lambda x: hasattr(x, "spec"))
+
+
+# --- mesh serving (DESIGN.md §12) --------------------------------------------
+
+
+def test_qtensor_pspecs_projection():
+    """Dense-layout specs projected onto packed codes: the column entry
+    always carries over; the contraction entry survives only when the
+    PACKED row count divides the mesh axes and packing padded nothing."""
+    from repro.core.qtensor import QTensor
+    from repro.launch.sharding import qtensor_pspecs
+    mesh = abstract_mesh((2, 4), ("data", "model"))
+
+    q = QTensor.from_master(jnp.zeros((128, 64)), "ternary")  # codes (8, 64)
+    cs, ss = qtensor_pspecs(P("data", "model"), q, mesh)
+    assert cs == P("data", "model")      # 8 % 2 == 0, no pad: K entry kept
+    assert ss is None                    # no per-channel scale
+
+    q_pad = QTensor.from_master(jnp.zeros((120, 64)), "ternary")
+    cs, _ = qtensor_pspecs(P("data", "model"), q_pad, mesh)
+    assert cs == P(None, "model")        # pad rows: a shard boundary would
+                                         # fall inside dequantize's pad-slice
+
+    q_small = QTensor.from_master(jnp.zeros((48, 64)), "ternary")  # 3 rows
+    cs, _ = qtensor_pspecs(P("data", "model"), q_small, mesh)
+    assert cs == P(None, "model")        # 3 % 2: would split a pack word
+
+    # leading stack axes carry over; per-output-channel scale follows the
+    # column entry so dequantize's broadcast stays shard-local
+    q3 = QTensor.from_master(jnp.zeros((4, 128, 64)), "ternary",
+                             scale=jnp.ones((1, 1, 64)))
+    cs, ss = qtensor_pspecs(P(None, "data", "model"), q3, mesh)
+    assert cs == P(None, "data", "model")
+    assert ss == P(None, None, "model")
+
+
+def test_slot_axis_recovery():
+    from repro.serve.kvcache import slot_axis
+    assert slot_axis((2, 8, 48), (2, 1, 48)) == 1   # (L, B, H) rnn state
+    assert slot_axis((8,), (1,)) == 0               # per-slot pos vector
+    assert slot_axis((4, 16), (4, 16)) is None      # 1-slot pool
+    with pytest.raises(ValueError, match="must be 1"):
+        slot_axis((2, 8, 48), (2, 3, 48))
+
+
+def test_serve_pool_shardings_structure():
+    """Every pool leaf gets a NamedSharding keyed off its slot axis (the
+    real data-axis placement is asserted on-device in test_mesh_engine)."""
+    from repro.launch.sharding import serve_pool_shardings
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    pool = {"h": jnp.zeros((2, 8, 48)), "pos": jnp.zeros((8,), jnp.int32)}
+    ref = {"h": jnp.zeros((2, 1, 48)), "pos": jnp.zeros((1,), jnp.int32)}
+    out = serve_pool_shardings(pool, ref, mesh)
+    assert set(out) == {"h", "pos"}
+    assert all(hasattr(s, "spec") for s in jax.tree_util.tree_leaves(
+        out, is_leaf=lambda x: hasattr(x, "spec")))
