@@ -58,10 +58,16 @@ def _packed_kernels(quick=False):
     return packed_kernels(quick=quick)
 
 
+def _train_rnn(quick=False):
+    from benchmarks.train_rnn import train_rnn_pipeline
+    return train_rnn_pipeline(quick=quick)
+
+
 BENCHES = {
     "packed_kernels": _packed_kernels,
     "serve_decode": _serve_decode,
     "serve_engine": _serve_engine,
+    "train_rnn": _train_rnn,
     "table1_char_lm": T.table1_char_lm,
     "table1b_convergence": T.table1b_convergence,
     "table2_text8": T.table2_text8,

@@ -1,0 +1,26 @@
+"""The train->export->serve pipeline as a recorded benchmark.
+
+Delegates to `repro.launch.train --arch rnn-paper --pipeline` (the one
+command the README documents): train the paper's BN-LSTM on the char-PTB
+stand-in corpus with a REAL mid-run SIGTERM + restart, assert the resumed
+run is bit-identical to an uninterrupted one, export the trained masters to
+packed ternary with frozen BN statistics, prove ServeEngine byte parity
+against the sequential oracle, and measure the trained-master speculative
+accept rate.  The launcher writes results/benchmarks/train_rnn.json itself;
+this wrapper returns the rows so `benchmarks.run` prints them in the table.
+"""
+from __future__ import annotations
+
+import tempfile
+
+
+def train_rnn_pipeline(quick: bool = False):
+    from repro.launch import train as LT
+
+    argv = ["--arch", "rnn-paper", "--reduced", "--pipeline",
+            "--batch", "16", "--seq", "32", "--steps", "300",
+            "--eval-every", "50", "--ckpt-every", "50", "--lr", "2e-3"]
+    if quick:
+        argv.append("--quick")
+    with tempfile.TemporaryDirectory(prefix="bench_train_rnn_") as d:
+        return LT.main(argv + ["--ckpt-dir", d])

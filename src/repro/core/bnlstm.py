@@ -108,6 +108,20 @@ def export_packed_rnn(params: dict, cfg: RNNConfig) -> dict:
     return export_packed(params, cfg.quant, policy=RNN_POLICY)
 
 
+def serving_variables(params: dict, bn_state: dict, cfg: RNNConfig) -> dict:
+    """The train->serve handoff in one call (DESIGN.md §13): pack the
+    trained fp masters and carry the training run's BN running statistics
+    along as the FROZEN eval-time statistics.
+
+    Serving always runs training=False, so `bn_apply` normalizes with these
+    running (mean, var) — the per-timestep minibatch statistics of training
+    never exist at decode time (batch of 1, step by step).  Handing the
+    state over untouched is what makes the serving model the same function
+    the validation BPC measured; `rnn_decode_tables` later folds these
+    statistics into per-gate affines once per export."""
+    return {"params": export_packed_rnn(params, cfg), "state": bn_state}
+
+
 def _quantized_weights(params, cfg: RNNConfig, rng: Optional[Array],
                        training: bool = True):
     out = []

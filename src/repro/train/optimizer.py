@@ -25,6 +25,7 @@ class OptConfig:
     b2: float = 0.999
     eps: float = 1e-8
     weight_decay: float = 0.0
+    momentum: float = 0.0        # SGD momentum buffer coefficient (0 = plain)
     clip_norm: float = 0.0       # 0 = off; paper word-PTB: 0.25
     warmup_steps: int = 0
     decay_steps: int = 0         # cosine horizon; 0 = constant
@@ -100,8 +101,9 @@ def opt_update(grads: Any, state: OptState, params: Any, cfg: OptConfig,
         new_params = jax.tree.map(upd, params, m, v)
         return new_params, OptState(step=step, m=m, v=v), metrics
 
-    # SGD with momentum buffer in m (paper's word-PTB setting uses plain SGD)
-    mom = 0.0
+    # SGD with momentum buffer in m (paper's word-PTB setting uses plain SGD,
+    # i.e. the default momentum=0.0; the buffer only carries when asked to)
+    mom = cfg.momentum
     m = jax.tree.map(lambda mm, g: mom * mm + g, state.m, grads)
     new_params = jax.tree.map(lambda p, mm: p - lr * mm, params, m)
     return new_params, OptState(step=step, m=m, v=None), metrics
@@ -109,16 +111,33 @@ def opt_update(grads: Any, state: OptState, params: Any, cfg: OptConfig,
 
 class PlateauLR:
     """Host-side plateau schedule (paper word-PTB: divide LR by 4 whenever
-    validation perplexity rises).  Produces an `lr_scale` fed to opt_update."""
+    validation perplexity rises *versus the previous evaluation*).  Produces
+    an `lr_scale` fed to opt_update.
+
+    The comparison is against the PREVIOUS eval, not the all-time best:
+    comparing against the best would multiply `scale` by `factor` on every
+    eval of a normal noisy recovery (each one still above the old best) and
+    collapse the LR geometrically after a single rise.  `best` is still
+    tracked, but only for reporting."""
 
     def __init__(self, factor: float = 0.25):
         self.factor = factor
+        self.prev: Optional[float] = None
         self.best: Optional[float] = None
         self.scale = 1.0
 
     def update(self, val_metric: float) -> float:
+        if self.prev is not None and val_metric > self.prev:
+            self.scale *= self.factor
+        self.prev = val_metric
         if self.best is None or val_metric < self.best:
             self.best = val_metric
-        else:
-            self.scale *= self.factor
+        return self.scale
+
+    def replay(self, val_metrics) -> float:
+        """Rebuild schedule state from a recorded metric history (restart
+        path: the launcher journals every eval, so a resumed run re-derives
+        the exact lr_scale the interrupted run was using)."""
+        for v in val_metrics:
+            self.update(float(v))
         return self.scale

@@ -50,6 +50,32 @@ def train_state_init(params: Any, opt_cfg: OptConfig, rng: Array,
 
 
 # ---------------------------------------------------------------------------
+# compressed-DP key hygiene (shared by both families)
+# ---------------------------------------------------------------------------
+
+
+def _dp_step_keys(rng: Array, data_axes) -> tuple[Array, Array]:
+    """Split one per-step key into (model key, compression key) inside a
+    shard_map region.
+
+    Two distinct hazards, two distinct fixes: (1) the model key (dropout /
+    stochastic quantization inside loss_fn) must be a DIFFERENT key from the
+    one driving `compress_tree`'s stochastic ternarization, or the two
+    random processes are correlated; (2) the rng arrives REPLICATED (in_spec
+    P()), so without decorrelation every data replica draws identical
+    compression randomness — correlated quantization noise that the
+    cross-replica mean cannot average away, defeating the error-feedback
+    variance reduction.  Folding each data axis' `axis_index` into the
+    compression key gives every replica an independent stream while the
+    model key stays replicated (matching the unsharded path's semantics of
+    one global-batch dropout draw per step)."""
+    k_model, k_comp = jax.random.split(rng)
+    for ax in data_axes:
+        k_comp = jax.random.fold_in(k_comp, jax.lax.axis_index(ax))
+    return k_model, k_comp
+
+
+# ---------------------------------------------------------------------------
 # transformer pool
 # ---------------------------------------------------------------------------
 
@@ -95,15 +121,21 @@ def make_train_step(cfg, opt_cfg: OptConfig,
     rep = P()
 
     def local_grads(params, batch, rng, residual):
+        k_model, k_comp = _dp_step_keys(rng, data_axes)
         # inside shard_map the mesh axes are Manual: the model's internal
         # with_sharding_constraint calls must become no-ops
         with use_mesh(None):
             (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-                params, batch, rng)
-        grads, new_res = C.compress_tree(grads, rng, residual)
+                params, batch, k_model)
+        grads, new_res = C.compress_tree(grads, k_comp, residual)
         mean = lambda t: jax.tree.map(
             lambda x: jax.lax.pmean(x, data_axes), t)
-        return mean(grads), new_res, mean(loss), mean(aux["nll"])
+        # the residual is pmean'd too: per-replica randomness makes the raw
+        # residuals genuinely diverge, and the carried TrainState.residual is
+        # replicated (out_spec P()).  The mean residual preserves the exact
+        # aggregate conservation law — mean(emitted) + mean(new_res) ==
+        # mean(grads) + old_res — so no signal is lost across steps.
+        return mean(grads), mean(new_res), mean(loss), mean(aux["nll"])
 
     def step(state: TrainState, batch) -> tuple[TrainState, dict]:
         rng, sub = jax.random.split(state.rng)
@@ -128,26 +160,80 @@ def make_train_step(cfg, opt_cfg: OptConfig,
 # ---------------------------------------------------------------------------
 
 
-def make_rnn_train_step(cfg: BL.RNNConfig, opt_cfg: OptConfig) -> Callable:
-    """step(state, batch) -> (state, metrics) for the faithful reproduction.
-    Threads BN running statistics through the state (paper Eq. 3)."""
+def make_rnn_train_step(cfg: BL.RNNConfig, opt_cfg: OptConfig,
+                        mesh=None, compress_grads: bool = False) -> Callable:
+    """step(state, batch, lr_scale=1.0) -> (state, metrics) for the faithful
+    reproduction.  Threads BN running statistics through the state (paper
+    Eq. 3).  `lr_scale` (traced scalar) is the plateau-schedule hook: the
+    launcher feeds `PlateauLR.update(val_bpc)` through it without retracing.
+
+    With `compress_grads` and a mesh, the same ternary-compressed
+    data-parallel pipeline as the transformer pool runs on the paper's own
+    model: per-replica gradients are ternarized (error feedback) inside
+    shard_map before the cross-replica mean.  BN batch statistics are then
+    per-replica (local-batch BN) with the running stats pmean'd — the
+    standard sync-free recurrent-BN compromise; the uncompressed path keeps
+    exact global-batch statistics."""
 
     def loss_fn(params, bn_state, tokens, targets, rng):
         loss, new_bn = BL.lm_loss({"params": params, "state": bn_state},
                                   tokens, targets, cfg, training=True, rng=rng)
         return loss, new_bn
 
-    def step(state: TrainState, batch) -> tuple[TrainState, dict]:
+    def apply_updates(state: TrainState, grads, lr_scale):
+        params, opt, m2 = opt_update(grads, state.opt, state.params, opt_cfg,
+                                     lr_scale)
+        return BL.clip_masters(params, cfg), opt, m2
+
+    if not (compress_grads and mesh is not None):
+        def step(state: TrainState, batch,
+                 lr_scale: Array | float = 1.0) -> tuple[TrainState, dict]:
+            rng, sub = jax.random.split(state.rng)
+            (loss, new_bn), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state.params, state.bn_state,
+                batch["tokens"], batch["targets"], sub)
+            metrics = {"loss": loss, "bpc": loss / jnp.log(2.0)}
+            params, opt, m2 = apply_updates(state, grads, lr_scale)
+            metrics.update(m2)
+            return state._replace(params=params, opt=opt, rng=rng,
+                                  bn_state=new_bn), metrics
+
+        return step
+
+    from jax.experimental.shard_map import shard_map
+    from repro.runtime import use_mesh
+
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    bspec = P(data_axes if len(data_axes) > 1 else data_axes[0])
+    rep = P()
+
+    def local_grads(params, bn_state, tokens, targets, rng, residual):
+        k_model, k_comp = _dp_step_keys(rng, data_axes)
+        with use_mesh(None):
+            (loss, new_bn), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, bn_state, tokens, targets, k_model)
+        grads, new_res = C.compress_tree(grads, k_comp, residual)
+        mean = lambda t: jax.tree.map(
+            lambda x: jax.lax.pmean(x, data_axes), t)
+        return mean(grads), mean(new_res), mean(loss), mean(new_bn)
+
+    def step(state: TrainState, batch,
+             lr_scale: Array | float = 1.0) -> tuple[TrainState, dict]:
         rng, sub = jax.random.split(state.rng)
-        (loss, new_bn), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-            state.params, state.bn_state, batch["tokens"], batch["targets"], sub)
-        params, opt, metrics = (None, None, {"loss": loss,
-                                             "bpc": loss / jnp.log(2.0)})
-        params, opt, m2 = opt_update(grads, state.opt, state.params, opt_cfg)
-        params = BL.clip_masters(params, cfg)
+        tspec = P(bspec[0], None)
+        fn = shard_map(
+            local_grads, mesh=mesh,
+            in_specs=(rep, rep, tspec, tspec, rep, rep),
+            out_specs=(rep, rep, rep, rep),
+            check_rep=False)
+        grads, new_res, loss, new_bn = fn(
+            state.params, state.bn_state, batch["tokens"], batch["targets"],
+            sub, state.residual)
+        metrics = {"loss": loss, "bpc": loss / jnp.log(2.0)}
+        params, opt, m2 = apply_updates(state, grads, lr_scale)
         metrics.update(m2)
         return state._replace(params=params, opt=opt, rng=rng,
-                              bn_state=new_bn), metrics
+                              bn_state=new_bn, residual=new_res), metrics
 
     return step
 

@@ -1,0 +1,163 @@
+"""The paper's BN-LSTM training loop: plateau schedule semantics, SGD
+momentum, bn_state/residual checkpoint round-trips, sample-exact resume,
+and the compressed-DP shard_map path on the RNN step.
+
+Deliberately free of optional deps (no hypothesis): these run in every
+container tier-1 does.
+"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bnlstm as BL
+from repro.core.quantize import QuantSpec
+from repro.data.synth import token_stream
+from repro.train import checkpoint as CK
+from repro.train.optimizer import OptConfig, PlateauLR, opt_init, opt_update
+from repro.train.train_step import make_rnn_train_step, train_state_init
+
+
+# --- plateau schedule (paper word-PTB: /4 on val rise vs PREVIOUS eval) ------
+
+
+def test_plateau_lr_recovery_does_not_collapse():
+    """The comparison is vs the PREVIOUS eval, not the all-time best: a
+    noisy recovery (falling again, but not yet below the old best) must not
+    keep dividing — only a genuine new rise cuts the LR further."""
+    p = PlateauLR()
+    p.update(100.0)
+    p.update(90.0)
+    assert p.update(95.0) == 0.25      # rise vs previous -> /4
+    assert p.update(93.0) == 0.25      # recovering: above best, below prev
+    assert p.update(91.0) == 0.25      # still recovering
+    assert p.update(92.0) == 0.0625    # a real second rise cuts again
+    assert p.best == 90.0              # best tracked for reporting only
+
+
+def test_plateau_replay_rebuilds_state():
+    """Restart path: replaying the journaled eval curve reproduces the
+    interrupted run's exact schedule state."""
+    hist = [100.0, 90.0, 95.0, 93.0, 96.0]
+    p = PlateauLR()
+    for v in hist:
+        p.update(v)
+    q = PlateauLR()
+    assert q.replay(hist) == p.scale
+    assert (q.prev, q.best) == (p.prev, p.best)
+
+
+# --- SGD momentum ------------------------------------------------------------
+
+
+def test_sgd_momentum_honored():
+    """OptConfig.momentum actually drives the SGD buffer (it was once a
+    hardcoded 0.0): two constant-gradient steps must compound by 1+mu."""
+    cfg = OptConfig(kind="sgd", lr=0.1, momentum=0.9)
+    params = {"w": jnp.array([1.0])}
+    g = {"w": jnp.array([1.0])}
+    p1, s1, _ = opt_update(g, opt_init(params, cfg), params, cfg)
+    assert float(p1["w"][0]) == pytest.approx(1.0 - 0.1)
+    p2, _, _ = opt_update(g, s1, p1, cfg)
+    assert float(p2["w"][0]) == pytest.approx(0.9 - 0.1 * 1.9)  # m2 = .9+1
+    # plain SGD (the default) is unchanged: no buffer carry
+    plain = OptConfig(kind="sgd", lr=0.1)
+    q1, t1, _ = opt_update(g, opt_init(params, plain), params, plain)
+    q2, _, _ = opt_update(g, t1, q1, plain)
+    assert float(q2["w"][0]) == pytest.approx(1.0 - 2 * 0.1)
+
+
+# --- bn_state/residual through checkpoint + resume ---------------------------
+
+
+def _rnn_tiny(compress=False):
+    cfg = BL.RNNConfig(vocab=24, d_hidden=32, cell="lstm",
+                       quant=QuantSpec(mode="ternary", norm="batch"))
+    var = BL.rnn_lm_init(jax.random.PRNGKey(0), cfg)
+    opt = OptConfig(lr=1e-3)
+    st = train_state_init(var["params"], opt, jax.random.PRNGKey(1),
+                          bn_state=var["state"], compress=compress)
+    return cfg, opt, st
+
+
+def _rnn_batch(i, vocab):
+    return {k: jnp.asarray(v) for k, v in token_stream(i, 4, 12, vocab).items()}
+
+
+def test_rnn_checkpoint_roundtrip_bn_state_and_residual():
+    """A TrainState carrying BN running statistics AND an error-feedback
+    residual survives save/restore bit-exactly — including restoring into a
+    template whose bn_state/residual are already populated."""
+    from repro.runtime import use_mesh
+    mesh = jax.make_mesh((1,), ("data",))
+    cfg, opt, st = _rnn_tiny(compress=True)
+    step = jax.jit(make_rnn_train_step(cfg, opt, mesh=mesh,
+                                       compress_grads=True))
+    with use_mesh(mesh):
+        for i in range(2):
+            st, _ = step(st, _rnn_batch(i, cfg.vocab))
+    # the residual picked up quantization error; bn stats advanced
+    assert sum(float(jnp.sum(jnp.abs(a)))
+               for a in jax.tree.leaves(st.residual)) > 0
+    with tempfile.TemporaryDirectory() as d:
+        CK.save(st, d, 2)
+        _, _, template = _rnn_tiny(compress=True)   # populated, different
+        restored = CK.restore(template, d, 2)
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_rnn_resume_is_sample_exact():
+    """Interrupt-at-3 + restore == straight 6 steps, bn_state included."""
+    cfg, opt, st0 = _rnn_tiny()
+    step = jax.jit(make_rnn_train_step(cfg, opt))
+
+    def run(state, s0, s1):
+        for i in range(s0, s1):
+            state, m = step(state, _rnn_batch(i, cfg.vocab))
+        return state, float(m["loss"])
+
+    straight, loss_straight = run(st0, 0, 6)
+    _, _, st1 = _rnn_tiny()
+    st1, _ = run(st1, 0, 3)
+    with tempfile.TemporaryDirectory() as d:
+        CK.save(st1, d, 3)
+        _, _, template = _rnn_tiny()
+        resumed = CK.restore(template, d, 3)
+    resumed, loss_resumed = run(resumed, 3, 6)
+    assert loss_resumed == pytest.approx(loss_straight, rel=1e-6)
+    for a, b in zip(jax.tree.leaves(straight.bn_state),
+                    jax.tree.leaves(resumed.bn_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_rnn_step_lr_scale_scales_lr():
+    """The plateau schedule's host-side scale reaches the update as a traced
+    scalar (same trace both calls — no retrace per scale change)."""
+    cfg, opt, st = _rnn_tiny()
+    step = jax.jit(make_rnn_train_step(cfg, opt))
+    b = _rnn_batch(0, cfg.vocab)
+    _, m1 = step(st, b, jnp.asarray(1.0, jnp.float32))
+    _, m2 = step(st, b, jnp.asarray(0.25, jnp.float32))
+    assert float(m2["lr"]) == pytest.approx(0.25 * float(m1["lr"]), rel=1e-6)
+
+
+def test_rnn_compressed_dp_train_step():
+    """make_rnn_train_step's shard_map compressed path: finite loss,
+    residual update, BN running stats advance."""
+    from repro.runtime import use_mesh
+    mesh = jax.make_mesh((1,), ("data",))
+    cfg, opt, st = _rnn_tiny(compress=True)
+    step = jax.jit(make_rnn_train_step(cfg, opt, mesh=mesh,
+                                       compress_grads=True))
+    with use_mesh(mesh):
+        st2, m = step(st, _rnn_batch(0, cfg.vocab))
+    assert np.isfinite(float(m["loss"]))
+    assert sum(float(jnp.sum(jnp.abs(a)))
+               for a in jax.tree.leaves(st2.residual)) > 0
+    changed = any(not np.array_equal(np.asarray(a), np.asarray(b))
+                  for a, b in zip(jax.tree.leaves(st.bn_state),
+                                  jax.tree.leaves(st2.bn_state)))
+    assert changed
